@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, corpus setup, method registry."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FCVIConfig, build, query, ground_truth_combined,
+                        recall_at_k, BoxPredicate, post_filter_search,
+                        pre_filter_search, build_hybrid, hybrid_search,
+                        ground_truth_filtered)
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.index import flat as flat_mod
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time (s) with jit warmup; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+def default_world(n=20000, d=64, n_queries=64, seed=0):
+    spec = CorpusSpec(n=n, d=d, n_categories=6, n_numeric=2, seed=seed)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, n_queries, seed=seed + 1)
+    return corpus, np.asarray(q), np.asarray(fq)
+
+
+def moderate_predicate(corpus):
+    """~25-40% selectivity numeric range predicate."""
+    spec = corpus.spec
+    lo = np.full(spec.m, -np.inf, np.float32)
+    hi = np.full(spec.m, np.inf, np.float32)
+    lo[-1], hi[-1] = 0.25, 0.6
+    return BoxPredicate(low=jnp.asarray(lo), high=jnp.asarray(hi))
+
+
+def fcvi_recall(index, q, fq, k):
+    _, ids = query(index, jnp.asarray(q), jnp.asarray(fq), k)
+    qn, fqn = index.transform.normalize(jnp.asarray(q), jnp.asarray(fq))
+    _, ref = ground_truth_combined(index.vectors_n, index.filters_n, qn, fqn,
+                                   k, index.config.lam)
+    return float(recall_at_k(ids, ref))

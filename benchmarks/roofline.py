@@ -1,0 +1,63 @@
+"""Roofline table generator — reads the dry-run artifacts (deliverable g).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
+Writes artifacts/roofline_table.md and prints a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*_{mesh}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_table(rows):
+    hdr = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+           "dominant | useful FLOPs | peak/dev GiB (raw / TPU-proj) |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                       f"{r.get('reason', r.get('error',''))[:40]} |  |  |  |  |  |  |")
+            continue
+        t = r["roofline"]
+        ma = r["memory_analysis"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | **{t['dominant']}** "
+            f"| {r['useful_flops_fraction']:.1%} "
+            f"| {ma['peak_estimate_bytes']/2**30:.1f} / "
+            f"{ma.get('projected_tpu_peak_bytes', 0)/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if not rows:
+        print(f"no artifacts for mesh {args.mesh}; run repro.launch.dryrun first")
+        return
+    table = fmt_table(rows)
+    out = os.path.join(os.path.dirname(ART), f"roofline_table_{args.mesh}.md")
+    with open(out, "w") as f:
+        f.write(f"# Roofline — {args.mesh} (per-device terms, v5e constants)\n\n")
+        f.write(table + "\n")
+    print(table)
+    print(f"\nwritten: {out}")
+
+
+if __name__ == "__main__":
+    main()

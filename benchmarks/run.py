@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table. CSV: name,us_per_call,derived.
+
+  table1       — paper Table 1 (latency/recall/throughput/size/build)
+  table2       — paper Table 2 (distribution-shift stability)
+  theory_sweep — Thm 5.4 k'(alpha, lambda) validation + kernel micro-bench
+
+Roofline (per paper deliverable g) reads dry-run artifacts separately:
+  PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "theory_sweep", None])
+    ap.add_argument("--n", type=int, default=20000)
+    args = ap.parse_args()
+
+    rows = []
+
+    def emit(name, value, derived=""):
+        rows.append((name, value, derived))
+        print(f"{name},{value:.4f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "table1"):
+        from benchmarks import table1
+        table1.run(emit, n=args.n)
+    if args.only in (None, "table2"):
+        from benchmarks import table2
+        table2.run(emit, n=min(args.n, 16000))
+    if args.only in (None, "theory_sweep"):
+        from benchmarks import theory_sweep
+        theory_sweep.run(emit, n=min(args.n, 12000))
+    print(f"# {len(rows)} measurements", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

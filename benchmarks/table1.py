@@ -1,0 +1,79 @@
+"""Paper Table 1: latency / recall@k / throughput / index size / build time
+for post-, pre-, hybrid (UNIFY-style) and FCVI x {flat, ivf, pq} backends.
+
+CPU-scale corpus (the paper's metric is RELATIVE behaviour between methods;
+see DESIGN.md §6 item 2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (default_world, fcvi_recall, moderate_predicate,
+                               timeit, tree_bytes)
+from repro.core import (FCVIConfig, build, query, BoxPredicate,
+                        post_filter_search, pre_filter_search, build_hybrid,
+                        hybrid_search, ground_truth_filtered, recall_at_k)
+from repro.index import flat as flat_mod
+
+K = 10
+
+
+def run(emit, n=20000, d=64):
+    corpus, q, fq = default_world(n=n, d=d)
+    v, f = jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters)
+    qj = jnp.asarray(q)
+    pred = moderate_predicate(corpus)
+    _, pred_ref = ground_truth_filtered(v, f, qj, pred, K)
+    nq = q.shape[0]
+
+    # ---------- baselines on a raw flat index ----------
+    t0 = time.perf_counter()
+    raw = flat_mod.build(v)
+    raw_build = time.perf_counter() - t0
+    raw_bytes = tree_bytes(raw)
+
+    t, (vals, ids) = timeit(
+        lambda: post_filter_search(raw, f, qj, pred, K, oversample=10))
+    emit("table1/post-flat/latency_ms", t * 1e3 / nq,
+         f"recall={float(recall_at_k(ids, pred_ref)):.3f},tput_qps={nq/t:.0f},"
+         f"size_mb={raw_bytes/2**20:.1f},build_s={raw_build:.2f}")
+
+    t, (vals, ids) = timeit(lambda: pre_filter_search(raw, f, qj, pred, K))
+    emit("table1/pre-flat/latency_ms", t * 1e3 / nq,
+         f"recall={float(recall_at_k(ids, pred_ref)):.3f},tput_qps={nq/t:.0f},"
+         f"size_mb={raw_bytes/2**20:.1f},build_s={raw_build:.2f}")
+
+    t0 = time.perf_counter()
+    hyb = build_hybrid(v, f, key_dim=f.shape[1] - 1, n_segments=32)
+    hyb_build = time.perf_counter() - t0
+    t, (vals, ids) = timeit(lambda: hybrid_search(hyb, qj, pred, K))
+    emit("table1/hybrid-unify/latency_ms", t * 1e3 / nq,
+         f"recall={float(recall_at_k(ids, pred_ref)):.3f},tput_qps={nq/t:.0f},"
+         f"size_mb={tree_bytes((hyb.flat, hyb.filters))/2**20:.1f},"
+         f"build_s={hyb_build:.2f}")
+
+    # ---------- FCVI variants (paper's method) ----------
+    from repro.core import multi_probe_query
+    probes = np.asarray(pred.probes(4))                    # (r, m) §4.3
+    probes_b = jnp.broadcast_to(jnp.asarray(probes)[None],
+                                (nq, *probes.shape))
+    for backend in ("flat", "ivf", "pq"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=16.0, backend=backend,
+                         nlist=64, nprobe=16, pq_m=8, pq_ksub=128)
+        t0 = time.perf_counter()
+        idx = build(v, f, cfg)
+        fcvi_build = time.perf_counter() - t0
+        t, (vals, ids) = timeit(
+            lambda: query(idx, qj, jnp.asarray(fq), K))
+        rec = fcvi_recall(idx, q, fq, K)
+        # predicate-mode recall: range predicate -> multi-probe (§4.3)
+        _, pids = multi_probe_query(idx, qj, probes_b, K)
+        pred_rec = float(recall_at_k(pids, pred_ref))
+        emit(f"table1/fcvi-{backend}/latency_ms", t * 1e3 / nq,
+             f"recall={rec:.3f},pred_recall={pred_rec:.3f},tput_qps={nq/t:.0f},"
+             f"size_mb={tree_bytes(idx.backend)/2**20:.1f},"
+             f"build_s={fcvi_build:.2f}")

@@ -1,0 +1,95 @@
+"""Paper Table 2: stability under distribution change.
+
+Three protocols (filter distribution / vector distribution / query pattern);
+for each method we report latency increase % and recall degradation (pts)
+relative to its own pre-shift baseline — the paper's exact metric.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (default_world, moderate_predicate, timeit)
+from repro.core import (FCVIConfig, build, query, ground_truth_combined,
+                        recall_at_k, post_filter_search, pre_filter_search,
+                        ground_truth_filtered)
+from repro.data.synthetic import (sample_queries, shift_filter_distribution,
+                                  shift_vector_distribution,
+                                  shifted_query_pattern)
+from repro.index import flat as flat_mod
+
+K = 10
+
+
+def _fcvi_eval(idx, q, fq):
+    qj, fj = jnp.asarray(q), jnp.asarray(fq)
+    t, (_, ids) = timeit(lambda: query(idx, qj, fj, K))
+    qn, fqn = idx.transform.normalize(qj, fj)
+    _, ref = ground_truth_combined(idx.vectors_n, idx.filters_n, qn, fqn, K,
+                                   idx.config.lam)
+    return t, float(recall_at_k(ids, ref))
+
+
+def _baseline_eval(raw, filters, q, pred, mode):
+    qj = jnp.asarray(q)
+    if mode == "post":
+        t, (_, ids) = timeit(
+            lambda: post_filter_search(raw, filters, qj, pred, K, oversample=10))
+    else:
+        t, (_, ids) = timeit(lambda: pre_filter_search(raw, filters, qj, pred, K))
+    _, ref = ground_truth_filtered(raw.vectors, filters, qj, pred, K)
+    return t, float(recall_at_k(ids, ref))
+
+
+def run(emit, n=16000, d=64):
+    corpus, q, fq = default_world(n=n, d=d)
+    v, f = jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters)
+    pred = moderate_predicate(corpus)
+
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=16.0)
+    idx = build(v, f, cfg)
+    raw = flat_mod.build(v)
+
+    base = {
+        "fcvi": _fcvi_eval(idx, q, fq),
+        "post": _baseline_eval(raw, f, q, pred, "post"),
+        "pre": _baseline_eval(raw, f, q, pred, "pre"),
+    }
+
+    shifts = {
+        "filter_dist": shift_filter_distribution(corpus),
+        "vector_dist": shift_vector_distribution(corpus),
+    }
+    for name, shifted in shifts.items():
+        sq, sfq = sample_queries(shifted, q.shape[0], seed=77)
+        sv = jnp.asarray(shifted.vectors)
+        sf = jnp.asarray(shifted.filters)
+        # NOTE: indexes are NOT rebuilt — the paper's stability protocol
+        sraw = flat_mod.FlatIndex(vectors=sv, sq_norms=jnp.sum(sv * sv, -1)) \
+            if name == "vector_dist" else raw
+        sfilters = sf
+        after = {
+            "fcvi": _fcvi_eval(idx, sq, sfq),
+            "post": _baseline_eval(sraw, sfilters, sq, pred, "post"),
+            "pre": _baseline_eval(sraw, sfilters, sq, pred, "pre"),
+        }
+        for meth in ("fcvi", "post", "pre"):
+            t0, r0 = base[meth]
+            t1, r1 = after[meth]
+            emit(f"table2/{name}/{meth}/lat_increase_pct",
+                 100.0 * (t1 - t0) / t0,
+                 f"rec_deg_pts={100*(r0-r1):.1f},base_recall={r0:.3f}")
+
+    # query-pattern shift: same corpus, out-of-pattern queries
+    sq, sfq = shifted_query_pattern(corpus, q.shape[0])
+    after = {
+        "fcvi": _fcvi_eval(idx, sq, sfq),
+        "post": _baseline_eval(raw, f, sq, pred, "post"),
+        "pre": _baseline_eval(raw, f, sq, pred, "pre"),
+    }
+    for meth in ("fcvi", "post", "pre"):
+        t0, r0 = base[meth]
+        t1, r1 = after[meth]
+        emit(f"table2/query_pattern/{meth}/lat_increase_pct",
+             100.0 * (t1 - t0) / t0,
+             f"rec_deg_pts={100*(r0-r1):.1f},base_recall={r0:.3f}")

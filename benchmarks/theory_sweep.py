@@ -1,0 +1,56 @@
+"""Thm 5.4 validation: recall vs k' across (alpha, lambda) — the paper's
+parameter-selection guidance, measured.
+
+Also sweeps the Pallas serving kernels against their oracles for the
+transform+score+topk hot path (per-call micro-latency).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import default_world, timeit
+from repro.core import (FCVIConfig, build, query, ground_truth_combined,
+                        recall_at_k, theory)
+from repro.kernels import ops, ref
+
+K = 10
+
+
+def run(emit, n=12000, d=64):
+    corpus, q, fq = default_world(n=n, d=d)
+    v, f = jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters)
+    qj, fj = jnp.asarray(q), jnp.asarray(fq)
+
+    for lam in (0.3, 0.6):
+        for alpha in (1.0, 2.0):
+            cfg = FCVIConfig(alpha=alpha, lam=lam, c=4.0)
+            idx = build(v, f, cfg)
+            qn, fqn = idx.transform.normalize(qj, fj)
+            _, ref_ids = ground_truth_combined(idx.vectors_n, idx.filters_n,
+                                               qn, fqn, K, lam)
+            kp_theory = theory.k_prime(K, lam, alpha, n, cfg.c)
+            for kp in (K, kp_theory, 4 * kp_theory):
+                kp = min(kp, n)
+                _, ids = query(idx, qj, fj, K, k_prime=kp)
+                rec = float(recall_at_k(ids, ref_ids))
+                emit(f"thm54/lam{lam}_a{alpha}/kprime_{kp}", float(kp),
+                     f"recall={rec:.3f},theory_kprime={kp_theory}")
+
+    # Pallas serving hot-path micro-bench (interpret mode on CPU)
+    corpus_j = v[:4096]
+    sq = jnp.sum(corpus_j * corpus_j, -1)
+    t, _ = timeit(lambda: ops.score_topk(corpus_j, sq, qj, K))
+    emit("kernels/fused_score_topk/us_per_query", t * 1e6 / q.shape[0],
+         "pallas_interpret")
+    t, _ = timeit(lambda: ops.score_topk(corpus_j, sq, qj, K,
+                                         use_pallas=False))
+    emit("kernels/score_topk_xla_ref/us_per_query", t * 1e6 / q.shape[0],
+         "jnp_oracle")
+    P = ref.partition_matrix(d, f.shape[1])
+    mv, sv = jnp.zeros(d), jnp.ones(d)
+    mf, sf = jnp.zeros(f.shape[1]), jnp.ones(f.shape[1])
+    vv = v[:4096]
+    ff = f[:4096]
+    t, _ = timeit(lambda: ops.fused_transform(vv, ff, P, 2.0, mv, sv, mf, sf))
+    emit("kernels/fcvi_transform/us_per_kvec", t * 1e6 / 4.096, "pallas_interpret")

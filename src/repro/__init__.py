@@ -1,0 +1,2 @@
+"""repro — FCVI (Filter-Centric Vector Indexing) as a multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,148 @@
+"""Sharded checkpointing with elastic restore (no orbax dependency).
+
+Layout:  <dir>/step_<N>/
+           manifest.json        — tree structure, shapes, dtypes, mesh metadata
+           arrays.npz           — one entry per leaf (flattened path keys)
+
+Writes are atomic (tmp dir + rename) so a crash mid-save never corrupts the
+latest checkpoint — the fault-tolerance contract is "the newest complete
+step_* directory is always loadable". ``restore`` accepts ANY target mesh:
+arrays are loaded replicated and re-laid-out via device_put with the target
+sharding, which is exactly the elastic-restart path (node loss -> smaller
+mesh -> resume).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bf16/f8) — view as same-width uints; the
+    true dtype is recorded in the manifest and restored on load."""
+    name = str(arr.dtype)
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name])
+    return arr
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DTYPES:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    storable = {k: _to_storable(v) for k, v in flat.items()}
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **storable)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
+            shardings: Any = None) -> tuple:
+    """Restore into ``template``'s tree structure (shapes are validated).
+
+    ``shardings``: optional matching tree of NamedShardings for the TARGET
+    mesh — this is the elastic-reshard path; None keeps arrays on the default
+    device.
+    Returns (tree, step, metadata).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_template = _flatten(template)
+    if sorted(flat_template) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_template)
+        raise ValueError(f"checkpoint/template key mismatch: {sorted(missing)[:8]}")
+
+    flat_shardings = _flatten(shardings) if shardings is not None else {}
+    leaves = []
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    for path, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = _from_storable(data[key], manifest["dtypes"][key])
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != template {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        if key in flat_shardings:
+            leaves.append(jax.device_put(arr, flat_shardings[key]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, step, manifest["metadata"]

@@ -1,0 +1,8 @@
+"""Architecture configs — import side-effect registers every arch."""
+from repro.configs.base import get_config, list_archs, reduced, register
+from repro.configs import (whisper_large_v3, recurrentgemma_2b, starcoder2_7b,
+                           gemma3_1b, mistral_nemo_12b, gemma2_27b,
+                           granite_moe_3b, dbrx_132b, xlstm_125m,
+                           internvl2_26b)
+
+__all__ = ["get_config", "list_archs", "reduced", "register"]

@@ -1,0 +1,39 @@
+"""FCVI core — the paper's contribution (transform + unified index + query)."""
+from repro.core.transform import (
+    Normalizer,
+    Transform,
+    fit_transform,
+    psi_partition,
+    psi_cluster,
+    psi_embedding,
+    tiled_filter,
+)
+from repro.core.fcvi import (
+    FCVIConfig,
+    FCVIIndex,
+    build,
+    query,
+    multi_probe_query,
+    ground_truth_combined,
+    recall_at_k,
+    extend,
+    cosine_sim,
+)
+from repro.core.baselines import (
+    BoxPredicate,
+    post_filter_search,
+    pre_filter_search,
+    build_hybrid,
+    hybrid_search,
+    ground_truth_filtered,
+)
+from repro.core import theory
+
+__all__ = [
+    "Normalizer", "Transform", "fit_transform", "psi_partition", "psi_cluster",
+    "psi_embedding", "tiled_filter", "FCVIConfig", "FCVIIndex", "build",
+    "query", "multi_probe_query", "ground_truth_combined", "recall_at_k",
+    "extend", "cosine_sim", "BoxPredicate", "post_filter_search",
+    "pre_filter_search", "build_hybrid", "hybrid_search",
+    "ground_truth_filtered", "theory",
+]

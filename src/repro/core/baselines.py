@@ -1,0 +1,181 @@
+"""Baseline filtered-search strategies the paper compares against (§2.2, §6.1.2).
+
+* post-filter : ANN search on raw vectors, then drop candidates failing the
+                predicate (recall collapses under selective filters).
+* pre-filter  : evaluate the predicate over the corpus, exact search inside
+                the eligible subset (slow when the subset is large).
+* hybrid      : UNIFY-style — segment the corpus by the primary filter key and
+                pick pre- vs post- per query from the predicate's range size.
+
+Predicates are axis-aligned boxes over raw filter values (range predicates;
+categorical equality is a zero-width box on the one-hot dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import flat as flat_mod
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BoxPredicate:
+    """match iff low_j <= f_j <= high_j for all constrained dims j.
+
+    Unconstrained dims use low=-inf / high=+inf.
+    """
+
+    low: Array   # (m,)
+    high: Array  # (m,)
+
+    def tree_flatten(self):
+        return (self.low, self.high), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def mask(self, filters: Array) -> Array:
+        return jnp.all((filters >= self.low) & (filters <= self.high), axis=-1)
+
+    def center(self) -> Array:
+        lo = jnp.where(jnp.isfinite(self.low), self.low, 0.0)
+        hi = jnp.where(jnp.isfinite(self.high), self.high, 0.0)
+        return 0.5 * (lo + hi)
+
+    def to_filter_query(self, filters: Array) -> Array:
+        """Soft-predicate encoding (§4.3): constrained dims take the range
+        center; unconstrained dims take the corpus mean (the neutral value
+        under per-dim standardization)."""
+        constrained = jnp.isfinite(self.low) | jnp.isfinite(self.high)
+        mean = jnp.mean(filters, axis=0)
+        return jnp.where(constrained, self.center(), mean)
+
+    def probes(self, r: int) -> Array:
+        """r representative filter vectors spanning the box (multi-probe §4.3)."""
+        lo = jnp.where(jnp.isfinite(self.low), self.low, 0.0)
+        hi = jnp.where(jnp.isfinite(self.high), self.high, 0.0)
+        t = jnp.linspace(0.0, 1.0, r)[:, None]
+        return lo[None, :] * (1 - t) + hi[None, :] * t
+
+
+# ---------------------------------------------------------------------------
+# Post-filtering
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "oversample"))
+def post_filter_search(index: flat_mod.FlatIndex, filters: Array, queries: Array,
+                       pred: BoxPredicate, k: int, oversample: int = 10):
+    """ANN (here exact-flat) on raw vectors, then predicate mask, then top-k."""
+    kp = min(k * oversample, index.size)
+    vals, idx = flat_mod.search(index, queries, kp)
+    ok = pred.mask(filters[idx])               # (q, kp)
+    vals = jnp.where(ok, vals, -jnp.inf)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    return top_vals, jnp.take_along_axis(idx, pos, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Pre-filtering
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def pre_filter_search(index: flat_mod.FlatIndex, filters: Array, queries: Array,
+                      pred: BoxPredicate, k: int):
+    """Predicate over the whole corpus first, exact search on survivors."""
+    mask = pred.mask(filters)
+    return flat_mod.search_masked(index, queries, k, mask)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (UNIFY-style segmented index with range-aware strategy selection)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HybridIndex:
+    """Corpus sorted by a primary filter key + segment boundaries.
+
+    Mimics UNIFY's segmented inclusive graph: S contiguous segments sorted on
+    the primary key support range pre-filtering by slicing segments; wide
+    ranges fall back to post-filtering on the global index.
+    """
+
+    flat: flat_mod.FlatIndex    # rows sorted by primary key
+    filters: Array              # (n, m) in sorted order
+    perm: Array                 # sorted row -> original id
+    key_dim: int
+    seg_starts: Array           # (S,) first row of each segment
+    seg_key_min: Array          # (S,)
+    seg_key_max: Array          # (S,)
+
+
+def build_hybrid(vectors: Array, filters: Array, key_dim: int = 0,
+                 n_segments: int = 32) -> HybridIndex:
+    keys = np.asarray(filters[:, key_dim])
+    perm = np.argsort(keys, kind="stable")
+    v_sorted = jnp.asarray(np.asarray(vectors)[perm])
+    f_sorted = jnp.asarray(np.asarray(filters)[perm])
+    n = len(perm)
+    bounds = np.linspace(0, n, n_segments + 1).astype(np.int64)
+    starts = bounds[:-1]
+    kmin = np.asarray([keys[perm[s]] for s in starts])
+    kmax = np.asarray([keys[perm[e - 1]] for e in bounds[1:]])
+    return HybridIndex(
+        flat=flat_mod.build(v_sorted),
+        filters=f_sorted,
+        perm=jnp.asarray(perm),
+        key_dim=key_dim,
+        seg_starts=jnp.asarray(starts),
+        seg_key_min=jnp.asarray(kmin),
+        seg_key_max=jnp.asarray(kmax),
+    )
+
+
+def hybrid_search(index: HybridIndex, queries: Array, pred: BoxPredicate, k: int,
+                  pre_threshold: float = 0.25, oversample: int = 10):
+    """Range-aware strategy selection (host-level, per query batch).
+
+    Estimates predicate selectivity from the segment key ranges; below
+    ``pre_threshold`` uses segment-sliced pre-filtering, else post-filtering.
+    Returns ids in ORIGINAL corpus numbering.
+    """
+    lo = float(np.asarray(pred.low)[index.key_dim])
+    hi = float(np.asarray(pred.high)[index.key_dim])
+    kmin = np.asarray(index.seg_key_min)
+    kmax = np.asarray(index.seg_key_max)
+    overlap = (kmax >= lo) & (kmin <= hi)
+    frac = overlap.sum() / max(len(overlap), 1)
+
+    if frac <= pre_threshold:
+        seg_mask = jnp.asarray(overlap)
+        row_seg = jnp.searchsorted(index.seg_starts,
+                                   jnp.arange(index.flat.size), side="right") - 1
+        row_ok = seg_mask[row_seg] & pred.mask(index.filters)
+        vals, idx = flat_mod.search_masked(index.flat, queries, k, row_ok)
+    else:
+        vals, idx = post_filter_search(index.flat, index.filters, queries, pred,
+                                       k, oversample)
+    return vals, index.perm[idx]
+
+
+# ---------------------------------------------------------------------------
+# Binary-predicate recall oracle (baseline ground truth)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def ground_truth_filtered(vectors: Array, filters: Array, queries: Array,
+                          pred: BoxPredicate, k: int):
+    """Exact top-k among predicate-satisfying rows (for baseline recall)."""
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    sq = jnp.sum(vectors * vectors, axis=-1)
+    scores = -(q2 - 2.0 * queries @ vectors.T + sq[None, :])
+    scores = jnp.where(pred.mask(filters)[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)

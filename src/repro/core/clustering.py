@@ -1,0 +1,76 @@
+"""Deterministic fixed-iteration k-means in pure JAX.
+
+Used by the cluster-based psi transform (Eq. 6), the IVF coarse quantizer and
+PQ codebook training. Fixed iteration count + kmeans++-style seeding keeps the
+computation SPMD-friendly (no dynamic convergence loop) and bitwise
+reproducible from the PRNG key.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _pairwise_sq_dists(x: Array, c: Array) -> Array:
+    """(n, d) x (k, d) -> (n, k) squared Euclidean distances (clamped >= 0)."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    return jnp.maximum(x2 - 2.0 * (x @ c.T) + c2, 0.0)
+
+
+def kmeans_plus_plus_init(rng: Array, x: Array, k: int) -> Array:
+    """k-means++ seeding (vectorised, O(k n d))."""
+    n = x.shape[0]
+    first = jax.random.randint(rng, (), 0, n)
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, state):
+        centers, key = state
+        key, sub = jax.random.split(key)
+        d2 = _pairwise_sq_dists(x, centers)
+        # distance to nearest already-chosen center; unchosen slots are zero
+        # vectors — mask them out by only considering slots < i.
+        mask = jnp.arange(k) < i
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+        dmin = jnp.min(d2, axis=-1)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        return centers.at[i].set(x[idx]), key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, rng))
+    return centers
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(rng: Array, x: Array, k: int, iters: int = 25) -> tuple[Array, Array]:
+    """Lloyd's with kmeans++ init. Returns (centers (k,d), labels (n,))."""
+    x = jnp.asarray(x, jnp.float32)
+    centers = kmeans_plus_plus_init(rng, x, k)
+
+    def step(centers, _):
+        d2 = _pairwise_sq_dists(x, centers)
+        labels = jnp.argmin(d2, axis=-1)
+        one_hot = jax.nn.one_hot(labels, k, dtype=x.dtype)  # (n, k)
+        counts = jnp.sum(one_hot, axis=0)                    # (k,)
+        sums = one_hot.T @ x                                 # (k, d)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old center for empty clusters
+        new = jnp.where(counts[:, None] > 0, new, centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    labels = jnp.argmin(_pairwise_sq_dists(x, centers), axis=-1)
+    return centers, labels
+
+
+def assign(x: Array, centers: Array) -> Array:
+    """Nearest-center assignment."""
+    return jnp.argmin(_pairwise_sq_dists(x, centers), axis=-1)
+
+
+def quantization_error(x: Array, centers: Array) -> Array:
+    return jnp.mean(jnp.min(_pairwise_sq_dists(x, centers), axis=-1))

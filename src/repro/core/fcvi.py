@@ -1,0 +1,231 @@
+"""FCVIIndex — the paper's Algorithm 1 as a composable JAX module.
+
+Offline: fit per-dim normalizers, fit psi (partition / cluster / embedding),
+transform the corpus, build ANY backend index (flat / IVF / PQ) over the
+transformed vectors, keep the normalized originals for re-scoring.
+
+Online: transform the query with its filter vector, over-retrieve
+k' = min(c * k/lambda * 1/alpha^2, N) (Thm 5.4), re-score candidates with
+score = lambda*sim(v,q) + (1-lambda)*sim(f,F_q), return top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+from repro.core.transform import Transform, fit_transform
+from repro.index import flat as flat_mod
+from repro.index import ivf as ivf_mod
+from repro.index import pq as pq_mod
+
+Array = jax.Array
+
+BACKENDS = ("flat", "ivf", "pq")
+
+
+@dataclasses.dataclass(frozen=True)
+class FCVIConfig:
+    alpha: float = 1.0
+    lam: float = 0.5            # lambda in [0,1]: 1 => pure vector similarity
+    c: float = 4.0              # k' headroom constant (Alg. 1 line 7)
+    mode: str = "partition"     # psi variant
+    backend: str = "flat"
+    n_clusters: int = 16        # cluster mode
+    nlist: int = 64             # IVF
+    nprobe: int = 8
+    pq_m: int = 8               # PQ subspaces
+    pq_ksub: int = 256
+    auto_alpha: bool = False    # alpha = max(1, sqrt((1-lam)/lam)), Thm 5.4
+    normalize: bool = True
+
+    def resolved_alpha(self) -> float:
+        if self.auto_alpha:
+            return float(theory.optimal_alpha(self.lam))
+        return max(1.0, float(self.alpha))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FCVIIndex:
+    config: FCVIConfig          # static
+    transform: Transform
+    backend: object             # FlatIndex | IVFIndex | PQIndex (transformed space)
+    vectors_n: Array            # (n, d) normalized originals (for re-scoring)
+    filters_n: Array            # (n, m) normalized filters
+
+    def tree_flatten(self):
+        return (self.transform, self.backend, self.vectors_n, self.filters_n), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(config, *children)
+
+    @property
+    def size(self) -> int:
+        return self.vectors_n.shape[0]
+
+
+def cosine_sim(a: Array, b: Array, eps: float = 1e-8) -> Array:
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + eps
+    return num / den
+
+
+def build(vectors: Array, filters: Array, config: FCVIConfig,
+          rng: Optional[Array] = None) -> FCVIIndex:
+    """Offline indexing (Alg. 1 lines 1-5)."""
+    if config.backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}")
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    alpha = config.resolved_alpha()
+    tfm = fit_transform(
+        vectors, filters, alpha, config.mode,
+        n_clusters=config.n_clusters, rng=rng, normalize=config.normalize,
+    )
+    vn = tfm.vec_norm.apply(vectors)
+    fn = tfm.filt_norm.apply(filters)
+    transformed = tfm.apply_normalized(vn, fn)
+
+    if config.backend == "flat":
+        backend = flat_mod.build(transformed)
+    elif config.backend == "ivf":
+        backend = ivf_mod.build(transformed, nlist=config.nlist, rng=rng)
+    else:
+        backend = pq_mod.build(transformed, m_subspaces=config.pq_m,
+                               ksub=config.pq_ksub, rng=rng)
+    return FCVIIndex(config=config, transform=tfm, backend=backend,
+                     vectors_n=vn, filters_n=fn)
+
+
+def _backend_search(index: FCVIIndex, q_t: Array, kp: int):
+    cfg = index.config
+    if cfg.backend == "flat":
+        return flat_mod.search(index.backend, q_t, kp)
+    if cfg.backend == "ivf":
+        return ivf_mod.search(index.backend, q_t, kp, nprobe=cfg.nprobe)
+    return pq_mod.search(index.backend, q_t, kp)
+
+
+def rescore(index: FCVIIndex, qn: Array, fqn: Array, cand_idx: Array, k: int):
+    """Alg. 1 lines 10-16: combined-score re-ranking of candidates.
+
+    qn: (b, d) normalized queries; fqn: (b, m); cand_idx: (b, k').
+    Returns (scores (b,k), ids (b,k)).
+    """
+    lam = index.config.lam
+    cv = index.vectors_n[cand_idx]               # (b, k', d)
+    cf = index.filters_n[cand_idx]               # (b, k', m)
+    s_v = cosine_sim(cv, qn[:, None, :])
+    s_f = cosine_sim(cf, fqn[:, None, :])
+    score = lam * s_v + (1.0 - lam) * s_f
+    vals, pos = jax.lax.top_k(score, k)
+    return vals, jnp.take_along_axis(cand_idx, pos, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "k_prime"))
+def query(index: FCVIIndex, q: Array, f_q: Array, k: int,
+          k_prime: Optional[int] = None):
+    """Online query processing (Alg. 1 lines 6-16). Batched.
+
+    q: (b, d); f_q: (b, m). Returns (scores (b,k), ids (b,k)).
+    """
+    cfg = index.config
+    kp = k_prime if k_prime is not None else theory.k_prime(
+        k, cfg.lam, cfg.resolved_alpha(), index.size, cfg.c)
+    qn, fqn = index.transform.normalize(q, f_q)
+    q_t = index.transform.apply_normalized(qn, fqn)
+    _, cand = _backend_search(index, q_t, kp)
+    return rescore(index, qn, fqn, cand, k)
+
+
+@partial(jax.jit, static_argnames=("k", "k_prime"))
+def multi_probe_query(index: FCVIIndex, q: Array, filter_probes: Array, k: int,
+                      k_prime: Optional[int] = None):
+    """Range/disjunctive filters (§4.3): probe r representative filter vectors,
+    merge + dedup candidates, re-score all, return top-k.
+
+    q: (b, d); filter_probes: (b, r, m) raw filter representatives.
+    """
+    cfg = index.config
+    b, r, m = filter_probes.shape
+    kp = k_prime if k_prime is not None else theory.k_prime(
+        k, cfg.lam, cfg.resolved_alpha(), index.size, cfg.c)
+
+    qn = index.transform.vec_norm.apply(q)
+    fqn = index.transform.filt_norm.apply(filter_probes)       # (b, r, m)
+    q_rep = jnp.broadcast_to(qn[:, None, :], (b, r, qn.shape[-1]))
+    q_t = index.transform.apply_normalized(q_rep, fqn)          # (b, r, d)
+    _, cand = _backend_search(index, q_t.reshape(b * r, -1), kp)
+    cand = cand.reshape(b, r * kp)
+    # dedup: demote duplicate ids so they cannot crowd the candidate set
+    sorted_cand = jnp.sort(cand, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), sorted_cand[:, 1:] == sorted_cand[:, :-1]], axis=-1)
+    # the probe filter used for scoring is the *best* per candidate; re-score
+    # against the centroid of the probes (continuous-match semantics).
+    f_center = jnp.mean(fqn, axis=1)
+    lam = cfg.lam
+    cv = index.vectors_n[sorted_cand]
+    cf = index.filters_n[sorted_cand]
+    s_v = cosine_sim(cv, qn[:, None, :])
+    # filter sim against nearest probe (max over probes)
+    s_f = jnp.max(cosine_sim(cf[:, :, None, :], fqn[:, None, :, :]), axis=-1)
+    score = lam * s_v + (1.0 - lam) * s_f
+    score = jnp.where(dup, -jnp.inf, score)
+    vals, pos = jax.lax.top_k(score, k)
+    return vals, jnp.take_along_axis(sorted_cand, pos, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Ground truth + recall (evaluation oracles)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def ground_truth_combined(vectors_n: Array, filters_n: Array, qn: Array,
+                          fqn: Array, k: int, lam: float):
+    """Exact top-k under the paper's combined score (the recall reference)."""
+    s_v = cosine_sim(vectors_n[None, :, :], qn[:, None, :])
+    s_f = cosine_sim(filters_n[None, :, :], fqn[:, None, :])
+    score = lam * s_v + (1.0 - lam) * s_f
+    return jax.lax.top_k(score, k)
+
+
+def recall_at_k(pred_ids: Array, true_ids: Array) -> Array:
+    """|pred ∩ true| / k, averaged over the query batch."""
+    hits = (pred_ids[:, :, None] == true_ids[:, None, :]).any(-1)
+    return jnp.mean(jnp.mean(hits.astype(jnp.float32), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Updates: delta buffer + compaction (production insert path)
+# ---------------------------------------------------------------------------
+
+def extend(index: FCVIIndex, new_vectors: Array, new_filters: Array) -> FCVIIndex:
+    """Append new rows and rebuild the backend over the transformed corpus.
+
+    Normalizer/centers are kept frozen (same geometry; matches the paper's
+    'incremental filter updates' §4.2 — a full refit is a separate offline
+    job). The serving engine batches inserts in a delta FlatIndex and calls
+    this on compaction.
+    """
+    tfm = index.transform
+    vn_new = tfm.vec_norm.apply(new_vectors)
+    fn_new = tfm.filt_norm.apply(new_filters)
+    vectors_n = jnp.concatenate([index.vectors_n, vn_new], axis=0)
+    filters_n = jnp.concatenate([index.filters_n, fn_new], axis=0)
+    transformed = tfm.apply_normalized(vectors_n, filters_n)
+    cfg = index.config
+    if cfg.backend == "flat":
+        backend = flat_mod.build(transformed)
+    elif cfg.backend == "ivf":
+        backend = ivf_mod.build(transformed, nlist=cfg.nlist)
+    else:
+        backend = pq_mod.build(transformed, m_subspaces=cfg.pq_m, ksub=cfg.pq_ksub)
+    return FCVIIndex(config=cfg, transform=tfm, backend=backend,
+                     vectors_n=vectors_n, filters_n=filters_n)

@@ -1,0 +1,94 @@
+"""Closed-form quantities from the paper's theory (§5).
+
+These are used at serving time (k' sizing, Alg. 1 line 7), at index-build time
+(alpha* for guaranteed cluster separation, Thm 5.3) and by the property tests
+(Thm 5.1 distance identities).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def transformed_sq_distance(v_a, v_b, f_a, f_b, alpha: float):
+    """Closed form of ||psi(v_a,f_a,a) - psi(v_b,f_b,a)||^2 (Thm 5.1 proof).
+
+    = ||va - vb||^2 + (d/m) a^2 ||fa - fb||^2
+      - 2 a sum_j <va^(j) - vb^(j), fa - fb>
+    """
+    d, m = v_a.shape[-1], f_a.shape[-1]
+    segs = d // m
+    dv = (v_a - v_b).reshape(*v_a.shape[:-1], segs, m)
+    df = f_a - f_b
+    base = jnp.sum((v_a - v_b) ** 2, axis=-1)
+    quad = segs * alpha**2 * jnp.sum(df * df, axis=-1)
+    cross = 2.0 * alpha * jnp.sum(dv * df[..., None, :], axis=(-1, -2))
+    return base + quad - cross
+
+
+def alpha_star(d_v: float, delta_f: float, d: int, m: int) -> float:
+    """Thm 5.3: minimum alpha guaranteeing complete cluster separation.
+
+    Requires (d/m) * delta_f > 2 * d_v (feasibility); returns +inf otherwise.
+
+    alpha* = sqrt((2 D_v + D_v^2) / ((d/m) delta_f^2 - 2 D_v delta_f))
+    """
+    segs = d / m
+    denom = segs * delta_f**2 - 2.0 * d_v * delta_f
+    feasible = segs * delta_f > 2.0 * d_v
+    val = jnp.sqrt(jnp.maximum(2.0 * d_v + d_v**2, 0.0) / jnp.maximum(denom, 1e-30))
+    return jnp.where(feasible & (denom > 0), val, jnp.inf)
+
+
+def optimal_alpha(lam: float) -> float:
+    """Thm 5.4 optimality note: alpha = sqrt((1-lam)/lam), clipped to >= 1.
+
+    Pure Python (not jnp): called with static config floats inside jitted
+    query processing, where the result must stay concrete.
+    """
+    import math
+
+    lam = min(max(float(lam), 1e-6), 1.0)
+    return max(1.0, math.sqrt((1.0 - lam) / lam))
+
+
+def k_prime(k: int, lam: float, alpha: float, n: int, c: float = 4.0) -> int:
+    """Alg. 1 line 7: k' = min(c * k/lam * 1/alpha^2, N).
+
+    Static python ints in, static int out — k' feeds static top-k shapes.
+    """
+    lam = max(float(lam), 1e-6)
+    alpha = max(float(alpha), 1.0)
+    kp = int(c * (k / lam) * (1.0 / alpha**2))
+    return max(k, min(max(kp, k), n))
+
+
+def separation_margin(d_v: float, delta_f: float, d: int, m: int, alpha: float):
+    """Worst-case inter-cluster distance minus intra-cluster diameter.
+
+    From Thm 5.3's proof: inter^2 >= (d/m) a^2 delta_f^2 - 2 a D_v delta_f,
+    intra <= D_v. Positive margin => complete separation.
+    """
+    segs = d / m
+    inter_sq = jnp.maximum(segs * alpha**2 * delta_f**2 - 2.0 * alpha * d_v * delta_f, 0.0)
+    return jnp.sqrt(inter_sq) - d_v
+
+
+def cluster_stats(filters, labels=None):
+    """Compute (D_v-style) delta_f = min inter-label filter distance.
+
+    Utility for tests/benchmarks; O(n^2), intended for small n.
+    """
+    import jax.numpy as jnp  # local: keep module import-light
+
+    f = filters
+    d2 = (
+        jnp.sum(f * f, -1)[:, None]
+        - 2.0 * f @ f.T
+        + jnp.sum(f * f, -1)[None, :]
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    if labels is None:
+        labels = jnp.arange(f.shape[0])
+    diff = labels[:, None] != labels[None, :]
+    big = jnp.where(diff, d2, jnp.inf)
+    return jnp.sqrt(jnp.min(big))

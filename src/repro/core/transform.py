@@ -1,0 +1,241 @@
+"""FCVI geometric transformations (paper §4.1).
+
+The transformation family psi(v, f, alpha) folds a filter vector f in R^m into
+an embedding v in R^d (m <= d) without changing dimensionality:
+
+  * partition  (Eq. 5): split v into d/m segments, subtract alpha*f from each.
+  * cluster    (Eq. 6): subtract alpha * (k-means center of f) instead — robust
+                        to high-cardinality / noisy filters.
+  * embedding  (Eq. 7): v - alpha * W f with a learned projection W in R^{d x m}.
+
+All functions are pure, jit-able, and batched over leading axes.
+The paper (§3.1, Eq. 1-2) requires each dimension of v and f to be
+standardized to N(0,1) across the dataset; ``Normalizer`` implements that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Per-dimension standardization (paper Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Normalizer:
+    """Per-dimension affine standardizer: x -> (x - mean) / std."""
+
+    mean: Array  # (dim,)
+    std: Array   # (dim,)
+
+    def tree_flatten(self):
+        return (self.mean, self.std), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def fit(x: Array, eps: float = 1e-6) -> "Normalizer":
+        """Fit over all leading axes; ``x`` has shape (..., dim)."""
+        flat = x.reshape(-1, x.shape[-1])
+        mean = jnp.mean(flat, axis=0)
+        std = jnp.std(flat, axis=0) + eps
+        return Normalizer(mean=mean, std=std)
+
+    def apply(self, x: Array) -> Array:
+        return (x - self.mean) / self.std
+
+    def inverse(self, x: Array) -> Array:
+        return x * self.std + self.mean
+
+    @staticmethod
+    def identity(dim: int, dtype=jnp.float32) -> "Normalizer":
+        return Normalizer(mean=jnp.zeros((dim,), dtype), std=jnp.ones((dim,), dtype))
+
+
+# ---------------------------------------------------------------------------
+# psi variants
+# ---------------------------------------------------------------------------
+
+def check_partition(d: int, m: int) -> int:
+    if m <= 0 or d <= 0:
+        raise ValueError(f"dims must be positive, got d={d} m={m}")
+    if m > d:
+        raise ValueError(f"filter dim m={m} must be <= vector dim d={d}")
+    if d % m != 0:
+        raise ValueError(
+            f"partition transform needs d % m == 0, got d={d}, m={m}; "
+            "pad the filter (Normalizer handles constant dims) or use the "
+            "embedding transform"
+        )
+    return d // m
+
+
+def psi_partition(v: Array, f: Array, alpha: float | Array) -> Array:
+    """Eq. 5: psi(v,f,a) = [v^(1) - a f, ..., v^(d/m) - a f].
+
+    v: (..., d); f: (..., m) with d % m == 0. Returns (..., d).
+    """
+    d, m = v.shape[-1], f.shape[-1]
+    segs = check_partition(d, m)
+    vt = v.reshape(*v.shape[:-1], segs, m)
+    out = vt - alpha * f[..., None, :]
+    return out.reshape(*v.shape)
+
+
+def psi_partition_inverse(v_t: Array, f: Array, alpha: float | Array) -> Array:
+    """Exact inverse of ``psi_partition`` given the filter (used by updates)."""
+    d, m = v_t.shape[-1], f.shape[-1]
+    segs = check_partition(d, m)
+    vt = v_t.reshape(*v_t.shape[:-1], segs, m)
+    return (vt + alpha * f[..., None, :]).reshape(*v_t.shape)
+
+
+def psi_cluster(v: Array, f: Array, alpha: float | Array, centers: Array) -> Array:
+    """Eq. 6: like Eq. 5 but subtract the nearest k-means center of f.
+
+    centers: (n_clusters, m).
+    """
+    # nearest center by squared L2
+    d2 = (
+        jnp.sum(f * f, axis=-1, keepdims=True)
+        - 2.0 * f @ centers.T
+        + jnp.sum(centers * centers, axis=-1)
+    )
+    assign = jnp.argmin(d2, axis=-1)
+    mu = centers[assign]
+    return psi_partition(v, mu, alpha)
+
+
+def psi_embedding(v: Array, f: Array, alpha: float | Array, w: Array) -> Array:
+    """Eq. 7: psi(v,f,a) = v - a * W f with W in R^{d x m}."""
+    return v - alpha * (f @ w.T)
+
+
+def tiled_filter(f: Array, d: int) -> Array:
+    """Tile f to length d (the implicit 'filter direction' of psi_partition).
+
+    psi_partition(v,f,a) == v - a * tiled_filter(f, d): subtracting f from
+    every m-segment equals subtracting the d-dim tiling of f.
+    """
+    m = f.shape[-1]
+    segs = check_partition(d, m)
+    return jnp.tile(f, (*([1] * (f.ndim - 1)), segs))
+
+
+# ---------------------------------------------------------------------------
+# Transform spec — a pytree carrying the mode + fitted parameters
+# ---------------------------------------------------------------------------
+
+MODES = ("partition", "cluster", "embedding")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """Fitted FCVI transform: mode + alpha + normalizers (+ centers / W)."""
+
+    mode: str  # static
+    alpha: Array  # scalar
+    vec_norm: Normalizer
+    filt_norm: Normalizer
+    centers: Optional[Array] = None   # (n_clusters, m) for mode=cluster
+    proj: Optional[Array] = None      # (d, m) for mode=embedding
+
+    def tree_flatten(self):
+        children = (self.alpha, self.vec_norm, self.filt_norm, self.centers, self.proj)
+        return children, self.mode
+
+    @classmethod
+    def tree_unflatten(cls, mode, children):
+        alpha, vec_norm, filt_norm, centers, proj = children
+        return cls(mode, alpha, vec_norm, filt_norm, centers, proj)
+
+    # -- application ------------------------------------------------------
+    def normalize(self, v: Array, f: Array) -> tuple[Array, Array]:
+        return self.vec_norm.apply(v), self.filt_norm.apply(f)
+
+    def apply(self, v: Array, f: Array) -> Array:
+        """Normalize then transform. v: (..., d), f: (..., m) -> (..., d)."""
+        vn, fn = self.normalize(v, f)
+        return self.apply_normalized(vn, fn)
+
+    def apply_normalized(self, vn: Array, fn: Array) -> Array:
+        if self.mode == "partition":
+            return psi_partition(vn, fn, self.alpha)
+        if self.mode == "cluster":
+            assert self.centers is not None
+            return psi_cluster(vn, fn, self.alpha, self.centers)
+        if self.mode == "embedding":
+            assert self.proj is not None
+            return psi_embedding(vn, fn, self.alpha, self.proj)
+        raise ValueError(f"unknown transform mode {self.mode!r}")
+
+
+def fit_transform(
+    vectors: Array,
+    filters: Array,
+    alpha: float,
+    mode: str = "partition",
+    *,
+    n_clusters: int = 0,
+    proj: Optional[Array] = None,
+    rng: Optional[Array] = None,
+    normalize: bool = True,
+) -> Transform:
+    """Fit normalizers (and cluster centers) on the corpus; return Transform."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    d, m = vectors.shape[-1], filters.shape[-1]
+    if mode != "embedding":
+        check_partition(d, m)
+    if normalize:
+        vec_norm = Normalizer.fit(vectors)
+        filt_norm = Normalizer.fit(filters)
+    else:
+        vec_norm = Normalizer.identity(d, vectors.dtype)
+        filt_norm = Normalizer.identity(m, filters.dtype)
+
+    centers = None
+    if mode == "cluster":
+        from repro.core.clustering import kmeans
+
+        if n_clusters <= 0:
+            raise ValueError("cluster mode needs n_clusters > 0")
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        centers, _ = kmeans(rng, filt_norm.apply(filters), n_clusters)
+
+    w = None
+    if mode == "embedding":
+        if proj is None:
+            # default untrained projection: tile the identity so that the
+            # embedding transform reduces to the partition transform; a
+            # trained W can be supplied by repro.train.filter_proj.
+            segs = d // m if d % m == 0 else 0
+            if segs:
+                w = jnp.tile(jnp.eye(m, dtype=vectors.dtype), (segs, 1))
+            else:
+                raise ValueError("embedding mode with d % m != 0 requires proj")
+        else:
+            w = jnp.asarray(proj)
+            if w.shape != (d, m):
+                raise ValueError(f"proj must be (d={d}, m={m}), got {w.shape}")
+
+    return Transform(
+        mode=mode,
+        alpha=jnp.asarray(alpha, jnp.float32),
+        vec_norm=vec_norm,
+        filt_norm=filt_norm,
+        centers=centers,
+        proj=w,
+    )

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules + activation constraint helpers.
+
+Model code annotates activations with LOGICAL axis names ("batch", "seq",
+"heads", "ff", "vocab", ...) via ``shard_act``; a process-wide ``AxisRules``
+context resolves them to mesh axes (or to no-ops when no mesh is active, so
+the same model code runs on 1 CPU device in tests).
+
+Parameter shardings are derived from leaf names by ``param_spec`` so
+``jax.jit(in_shardings=...)`` gets a PartitionSpec tree that matches
+``init_params`` exactly.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical name -> mesh axis (or tuple of axes, or None=replicate)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),   # DP over pod x data
+    "seq": None,                # replicated by default (TP keeps seq whole)
+    "kv_seq": "model",          # decode KV caches: sequence-sharded
+    "heads": "model",
+    "kv_heads": None,           # few KV heads: replicate (see param_spec)
+    "embed": None,
+    "head_dim": None,
+    "ff": "model",
+    "moe_ff": None,             # per-expert ff: unsharded under EP (experts
+                                # take 'model'); granite overrides (E % 16 != 0)
+    "vocab": "model",
+    "experts": "model",         # EP
+    "rnn": "model",
+    "corpus": ("pod", "data"),  # FCVI corpus rows
+    "none": None,
+}
+
+
+class AxisRules:
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        if mesh is not None:
+            # drop axes the mesh does not have (e.g. "pod" on single-pod)
+            have = set(mesh.axis_names)
+
+            def fix(v):
+                if v is None:
+                    return None
+                if isinstance(v, tuple):
+                    kept = tuple(a for a in v if a in have)
+                    return kept if kept else None
+                return v if v in have else None
+
+            self.rules = {k: fix(v) for k, v in self.rules.items()}
+
+    def spec(self, *names: Optional[str]) -> P:
+        return P(*[self.rules.get(n or "none") for n in names])
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard_act(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain activation x to the logical spec; no-op without a mesh."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.spec(*names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by leaf path name
+# ---------------------------------------------------------------------------
+
+def _leaf_logical(path: str, ndim: int, scanned: bool) -> tuple:
+    """Map a parameter leaf (by its path string) to logical axis names.
+
+    ``scanned`` leaves carry a leading stacked-periods dim (replicated).
+    """
+    name = path.split("/")[-1]
+    base: tuple
+    if name in ("embedding",):
+        base = ("vocab", "embed")
+    elif name in ("wq",):
+        base = ("embed", "heads", "head_dim")
+    elif name in ("wk", "wv"):
+        base = ("embed", "kv_heads", "head_dim")
+    elif name in ("wo",):
+        base = ("heads", "head_dim", "embed")
+    elif name in ("w_in", "w_gate"):
+        base = ("embed", "ff")
+    elif name in ("w_out",):
+        base = ("ff", "embed")
+    elif name in ("we_in", "we_gate"):          # MoE expert weights
+        base = ("experts", "embed", "moe_ff")
+    elif name in ("we_out",):
+        base = ("experts", "moe_ff", "embed")
+    elif name in ("w_router",):
+        base = ("embed", "experts")
+    elif name in ("lm_head",):
+        base = ("embed", "vocab")
+    elif name in ("w_rnn_in", "w_rnn_gate"):    # RG-LRU input projections
+        base = ("embed", "rnn")
+    elif name in ("w_rnn_out",):
+        base = ("rnn", "embed")
+    elif name in ("w_gate_a", "w_gate_x"):      # RG-LRU recurrence gates
+        base = ("none", "rnn")                  # square (d_rnn, d_rnn): shard
+                                                # output dim only
+    elif name in ("conv_w",):                   # temporal conv (width, rnn)
+        base = ("none", "rnn")
+    elif name in ("wqkv_lstm",):                # xLSTM fused projections
+        base = ("embed", "none", "heads", "head_dim")
+    elif name in ("w_lstm_out",):
+        base = ("heads", "head_dim", "embed")
+    elif name in ("w_gates",):                  # xLSTM scalar gates
+        base = ("embed", "none", "heads")
+    else:
+        base = tuple("none" for _ in range(ndim - (1 if scanned else 0)))
+    if scanned:
+        base = ("none",) + base
+    # pad/trim against actual rank (bias vectors etc.)
+    if len(base) != ndim:
+        base = tuple("none" for _ in range(ndim))
+    return base
+
+
+def param_spec_tree(params: Any, rules: AxisRules) -> Any:
+    """PartitionSpec tree for a param pytree (path-name driven)."""
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        scanned = "scan" in pstr
+        names = _leaf_logical(pstr, leaf.ndim, scanned)
+        return rules.spec(*names)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def named_sharding_tree(params: Any, rules: AxisRules) -> Any:
+    specs = param_spec_tree(params, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+"""Vector index backends (TPU-native: tiled matmul / IVF / PQ) + distributed search."""
+from repro.index import flat, ivf, pq, distributed
+
+__all__ = ["flat", "ivf", "pq", "distributed"]

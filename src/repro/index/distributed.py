@@ -1,0 +1,168 @@
+"""Distributed (multi-device / multi-pod) search via shard_map.
+
+The corpus is row-sharded over one or more mesh axes; every device scores its
+shard locally (flat or IVF) and the per-shard top-k candidates are merged with
+a tree of all-gathers — one merge stage per mesh axis, so cross-pod traffic is
+only the (k x devices-per-axis) candidate sets, never raw scores.
+
+Filter-centric placement (beyond-paper): since psi() already arranges the
+corpus into filter clusters, we can shard BY cluster so most queries touch a
+few shards; `cluster_sharded_layout` computes that permutation and
+`routed_search` masks non-probed shards to skip their matmul.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.clustering import assign
+from repro.index import flat as flat_mod
+
+Array = jax.Array
+
+
+def _local_search(vectors: Array, sq_norms: Array, queries: Array, k: int,
+                  row_offset: Array):
+    """Exact local top-k with globally valid row ids."""
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    scores = -(q2 - 2.0 * queries @ vectors.T + sq_norms[None, :])
+    vals, idx = jax.lax.top_k(scores, min(k, vectors.shape[0]))
+    return vals, idx + row_offset
+
+
+def _merge_over_axis(vals: Array, idx: Array, axis: str, k: int):
+    """All-gather candidate sets over one mesh axis and reduce to top-k."""
+    g_vals = jax.lax.all_gather(vals, axis)  # (n_ax, q, k)
+    g_idx = jax.lax.all_gather(idx, axis)
+    n_ax = g_vals.shape[0]
+    g_vals = jnp.moveaxis(g_vals, 0, -2).reshape(*vals.shape[:-1], n_ax * vals.shape[-1])
+    g_idx = jnp.moveaxis(g_idx, 0, -2).reshape(*idx.shape[:-1], n_ax * idx.shape[-1])
+    top_vals, pos = jax.lax.top_k(g_vals, k)
+    return top_vals, jnp.take_along_axis(g_idx, pos, axis=-1)
+
+
+def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
+                      k_local: int = 0):
+    """Build a shard_map'd exact search over a corpus sharded on shard_axes.
+
+    Returns fn(vectors (n,d), sq_norms (n,), queries (q,d)) -> (vals, idx)
+    with vectors/sq_norms sharded over rows and queries/output replicated.
+
+    ``k_local`` > 0 truncates per-shard candidate sets before the merge tree
+    (candidate-volume /= k/k_local). Statistically safe when k_local well
+    exceeds k / n_shards x (merge fan-in): with row-sharded corpora the
+    global top-k is spread ~uniformly, so a shard rarely owns more than a
+    few winners.
+    """
+    axes = tuple(shard_axes)
+    kl = k_local if k_local and k_local < k else k
+
+    def local_fn(vectors, sq_norms, queries):
+        # global row offset of this shard: row-major over the shard axes
+        n_local = vectors.shape[0]
+        offset = jnp.int32(0)
+        stride = n_local
+        for ax in reversed(axes):
+            offset = offset + jax.lax.axis_index(ax) * stride
+            stride = stride * jax.lax.axis_size(ax)
+        vals, idx = _local_search(vectors, sq_norms, queries, kl, offset)
+        # pad so merges are static even when shards are small
+        if vals.shape[-1] < kl:
+            pad = kl - vals.shape[-1]
+            vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+            idx = jnp.pad(idx, ((0, 0), (0, pad)))
+        # hierarchical merge: keep k_local until the LAST stage, then k
+        for i, ax in enumerate(reversed(axes)):
+            keep = k if i == len(axes) - 1 else kl
+            vals, idx = _merge_over_axis(vals, idx, ax, keep)
+        return vals, idx
+
+    row_spec = P(axes)  # rows sharded over the product of axes
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(row_spec, row_spec, P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+
+def cluster_sharded_layout(vectors: Array, centroids: Array, n_shards: int):
+    """Permutation placing whole clusters on shards (filter-centric placement).
+
+    Returns (perm, shard_of_cluster): ``vectors[perm]`` groups rows so that
+    shard s holds the contiguous slice [s*n/n_shards, (s+1)*n/n_shards) and
+    clusters are greedily packed (largest first) to balance shard loads.
+    """
+    import numpy as np
+
+    labels = np.asarray(assign(vectors, centroids))
+    n = len(labels)
+    nclusters = centroids.shape[0]
+    order = np.argsort([-np.sum(labels == c) for c in range(nclusters)])
+    shard_load = np.zeros(n_shards, np.int64)
+    shard_of_cluster = np.zeros(nclusters, np.int32)
+    shard_members: list[list[int]] = [[] for _ in range(n_shards)]
+    for c in order:
+        members = np.nonzero(labels == c)[0]
+        s = int(np.argmin(shard_load))
+        shard_of_cluster[c] = s
+        shard_load[s] += len(members)
+        shard_members[s].extend(members.tolist())
+    # round-robin rebalance to exact equal shard sizes (pad via stealing)
+    target = n // n_shards
+    overflow: list[int] = []
+    for s in range(n_shards):
+        while len(shard_members[s]) > target:
+            overflow.append(shard_members[s].pop())
+    for s in range(n_shards):
+        while len(shard_members[s]) < target and overflow:
+            shard_members[s].append(overflow.pop())
+    perm = np.concatenate([np.asarray(m, np.int64) for m in shard_members])
+    return jnp.asarray(perm), jnp.asarray(shard_of_cluster)
+
+
+def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
+    """Like sharded_search_fn but each shard is given a per-query probe mask;
+    unprobed shards contribute -inf rows (their matmul result is discarded by
+    XLA's select; on real hardware the win is realised by the engine batching
+    queries per shard-group so unprobed shards run other queries).
+    """
+    axes = tuple(shard_axes)
+    base = sharded_search_fn(mesh, shard_axes, k)  # reuse merge structure
+
+    def local_fn(vectors, sq_norms, queries, probe_mask):
+        n_local = vectors.shape[0]
+        offset = jnp.int32(0)
+        stride = n_local
+        shard_lin = jnp.int32(0)
+        lin_stride = 1
+        for ax in reversed(axes):
+            aidx = jax.lax.axis_index(ax)
+            offset = offset + aidx * stride
+            stride = stride * jax.lax.axis_size(ax)
+            shard_lin = shard_lin + aidx * lin_stride
+            lin_stride = lin_stride * jax.lax.axis_size(ax)
+        vals, idx = _local_search(vectors, sq_norms, queries, k, offset)
+        mine = probe_mask[:, shard_lin]  # (q,)
+        vals = jnp.where(mine[:, None], vals, -jnp.inf)
+        if vals.shape[-1] < k:
+            pad = k - vals.shape[-1]
+            vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+            idx = jnp.pad(idx, ((0, 0), (0, pad)))
+        for ax in reversed(axes):
+            vals, idx = _merge_over_axis(vals, idx, ax, k)
+        return vals, idx
+
+    row_spec = P(axes)
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(row_spec, row_spec, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )

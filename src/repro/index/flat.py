@@ -1,0 +1,112 @@
+"""Exact (flat) top-k search — the TPU-native 'HNSW replacement'.
+
+Brute-force tiled matmul + running top-k is the roofline-optimal search
+primitive on MXU hardware for per-device shards up to ~10M vectors: arithmetic
+intensity of the distance matmul is d/2 FLOPs per corpus byte, which is
+compute-bound for d >= ~512 at bf16 and keeps the MXU busy, unlike
+pointer-chasing graph indexes. The corpus is streamed through VMEM in row
+blocks with a running (value, index) top-k merge so the working set stays
+constant in N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatIndex:
+    """Corpus matrix + precomputed squared norms."""
+
+    vectors: Array   # (n, d)
+    sq_norms: Array  # (n,)
+
+    def tree_flatten(self):
+        return (self.vectors, self.sq_norms), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+
+def build(vectors: Array) -> FlatIndex:
+    vectors = jnp.asarray(vectors)
+    return FlatIndex(vectors=vectors, sq_norms=jnp.sum(vectors * vectors, axis=-1))
+
+
+def merge_topk(vals_a: Array, idx_a: Array, vals_b: Array, idx_b: Array, k: int):
+    """Merge two (..., >=k) score/index sets into the joint top-k (max-score)."""
+    vals = jnp.concatenate([vals_a, vals_b], axis=-1)
+    idxs = jnp.concatenate([idx_a, idx_b], axis=-1)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    return top_vals, jnp.take_along_axis(idxs, pos, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "block_rows"))
+def search(index: FlatIndex, queries: Array, k: int, block_rows: int = 0):
+    """Top-k by squared-L2 (returned as NEGATIVE distance = score).
+
+    queries: (q, d). Returns (scores (q,k), indices (q,k)).
+    ``block_rows`` > 0 streams the corpus in blocks of that many rows with a
+    running top-k (bounded memory); 0 scores everything at once.
+    """
+    n = index.size
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+
+    def score_block(rows: Array, row_sq: Array) -> Array:
+        # negative squared distance (higher is better)
+        return -(q2 - 2.0 * queries @ rows.T + row_sq[None, :])
+
+    if block_rows <= 0 or block_rows >= n:
+        scores = score_block(index.vectors, index.sq_norms)
+        vals, idx = jax.lax.top_k(scores, min(k, n))
+        return vals, idx
+
+    if n % block_rows != 0:
+        raise ValueError(f"block_rows={block_rows} must divide n={n}")
+    nblk = n // block_rows
+    vecs = index.vectors.reshape(nblk, block_rows, index.dim)
+    sqs = index.sq_norms.reshape(nblk, block_rows)
+    kk = min(k, block_rows)
+
+    def body(carry, blk):
+        run_vals, run_idx = carry
+        rows, row_sq, blk_id = blk
+        s = score_block(rows, row_sq)
+        v, i = jax.lax.top_k(s, kk)
+        i = i + blk_id * block_rows
+        return merge_topk(run_vals, run_idx, v, i, k), None
+
+    init_vals = jnp.full((queries.shape[0], k), -jnp.inf, queries.dtype)
+    init_idx = jnp.zeros((queries.shape[0], k), jnp.int32)
+    (vals, idx), _ = jax.lax.scan(
+        body, (init_vals, init_idx), (vecs, sqs, jnp.arange(nblk))
+    )
+    return vals, idx
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search_masked(index: FlatIndex, queries: Array, k: int, mask: Array):
+    """Exact search restricted to ``mask`` (pre-filtering primitive).
+
+    mask: (n,) bool — True rows are eligible. Ineligible rows score -inf.
+    """
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    scores = -(q2 - 2.0 * queries @ index.vectors.T + index.sq_norms[None, :])
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, min(k, index.size))

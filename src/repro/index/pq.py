@@ -1,0 +1,105 @@
+"""Product Quantization index with ADC (asymmetric distance) LUT scoring.
+
+TPU adaptation of the paper's third backend (ANNOY slot): PQ compresses each
+vector into M int8 codes; queries build an (M, ksub) LUT of subspace distances
+and score each corpus row with a gather-accumulate over its codes — a memory-
+bound sweep at ~M bytes/row instead of 4d, i.e. a (4d/M)x compression of HBM
+traffic. `repro/kernels/pq_lut.py` is the Pallas version of the scoring loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import kmeans, assign
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PQIndex:
+    codebooks: Array  # (M, ksub, dsub)
+    codes: Array      # (n, M) int32 in [0, ksub)
+
+    def tree_flatten(self):
+        return (self.codebooks, self.codes), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def n_subspaces(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def ksub(self) -> int:
+        return self.codebooks.shape[1]
+
+
+def build(vectors: Array, m_subspaces: int = 8, ksub: int = 256,
+          rng: Array | None = None, iters: int = 15) -> PQIndex:
+    vectors = jnp.asarray(vectors, jnp.float32)
+    n, d = vectors.shape
+    if d % m_subspaces:
+        raise ValueError(f"d={d} must be divisible by M={m_subspaces}")
+    dsub = d // m_subspaces
+    ksub = min(ksub, n)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    keys = jax.random.split(rng, m_subspaces)
+    sub = vectors.reshape(n, m_subspaces, dsub)
+
+    books, codes = [], []
+    for j in range(m_subspaces):
+        c, lbl = kmeans(keys[j], sub[:, j, :], ksub, iters=iters)
+        books.append(c)
+        codes.append(lbl)
+    return PQIndex(
+        codebooks=jnp.stack(books),            # (M, ksub, dsub)
+        codes=jnp.stack(codes, axis=1).astype(jnp.int32),  # (n, M)
+    )
+
+
+def compute_luts(index: PQIndex, queries: Array) -> Array:
+    """(q, d) -> (q, M, ksub) squared-distance lookup tables."""
+    q, d = queries.shape
+    m, ksub, dsub = index.codebooks.shape
+    qs = queries.reshape(q, m, dsub)
+    # (q, m, ksub): ||q_sub - c||^2
+    diff = qs[:, :, None, :] - index.codebooks[None, :, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search(index: PQIndex, queries: Array, k: int):
+    """ADC scan: score every row from the LUT; negative distance as score."""
+    luts = compute_luts(index, queries)  # (q, M, ksub)
+
+    def one_query(lut):
+        # gather-accumulate: sum_m lut[m, code[n, m]]
+        per_sub = jnp.take_along_axis(
+            lut.T[None, :, :],                   # (1, ksub, M) -> broadcast
+            index.codes[:, None, :],             # (n, 1, M)
+            axis=1,
+        )[:, 0, :]                               # (n, M)
+        d2 = jnp.sum(per_sub, axis=-1)
+        return jax.lax.top_k(-d2, min(k, index.size))
+
+    return jax.vmap(one_query)(luts)
+
+
+def reconstruct(index: PQIndex, ids: Array) -> Array:
+    """Decode rows back to d-dim vectors (for re-scoring fallbacks)."""
+    codes = index.codes[ids]                     # (..., M)
+    m = index.n_subspaces
+    parts = [index.codebooks[j][codes[..., j]] for j in range(m)]
+    return jnp.concatenate(parts, axis=-1)

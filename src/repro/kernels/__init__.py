@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for FCVI's serving hot spots (+ jnp oracles in ref.py)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,107 @@
+"""Pallas kernel: fused distance + running top-k — the serving inner loop.
+
+For each (query-tile, corpus-block) cell the kernel computes the negative
+squared-L2 scores with one MXU matmul (||q||^2 - 2 q.x + ||x||^2) and merges
+them into a running (value, index) top-k that lives in the output refs across
+the sequential corpus-block grid dimension. The corpus is therefore streamed
+through VMEM exactly once, and no (q x n) score matrix ever exists in HBM —
+the k-selection is fused into the scan.
+
+Top-k selection uses an unrolled k-step max/mask sweep (max + iota-argmin)
+instead of lax.top_k so every op lowers to plain TPU vector reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK_ROWS = 128
+DEF_BLOCK_Q = 64
+NEG_INF = float("-inf")
+
+
+def _select_topk(vals, ids, k: int):
+    """Unrolled first-occurrence top-k over the last axis. vals: (q, c)."""
+    c = vals.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    out_v, out_i = [], []
+    cur = vals
+    for _ in range(k):
+        m = jnp.max(cur, axis=-1, keepdims=True)
+        pos = jnp.min(jnp.where(cur == m, iota, c), axis=-1, keepdims=True)
+        sel = iota == pos
+        out_v.append(m[:, 0])
+        out_i.append(jnp.sum(jnp.where(sel, ids, 0), axis=-1))
+        cur = jnp.where(sel, NEG_INF, cur)
+    return jnp.stack(out_v, axis=-1), jnp.stack(out_i, axis=-1)
+
+
+def _kernel(x_ref, xsq_ref, q_ref, qsq_ref, vals_ref, idx_ref, *, k: int,
+            block_rows: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...]                     # (bn, d)
+    q = q_ref[...]                     # (bq, d)
+    scores = 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    scores = scores - xsq_ref[...][None, :] - qsq_ref[...][:, None]
+    gids = j * block_rows + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    run_v = vals_ref[...]
+    run_i = idx_ref[...]
+    cat_v = jnp.concatenate([run_v, scores], axis=-1)
+    cat_i = jnp.concatenate([run_i, gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_rows", "block_q", "interpret"))
+def score_topk(corpus, sq_norms, queries, k: int, *,
+               block_rows: int = DEF_BLOCK_ROWS, block_q: int = DEF_BLOCK_Q,
+               interpret: bool = True):
+    """corpus: (n, d); sq_norms: (n,); queries: (q, d).
+
+    Returns (scores (q, k), ids (q, k)) — negative squared L2, descending.
+    """
+    n, d = corpus.shape
+    nq = queries.shape[0]
+    block_rows = min(block_rows, n)
+    block_q = min(block_q, nq)
+    if n % block_rows or nq % block_q:
+        raise ValueError(
+            f"shapes must tile: n={n} %% {block_rows}, q={nq} %% {block_q}")
+    if k > n:
+        raise ValueError(f"k={k} > corpus size {n}")
+    grid = (nq // block_q, n // block_rows)
+    qsq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+
+    kernel = functools.partial(_kernel, k=k, block_rows=block_rows)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_rows,), lambda i, j: (j,)),
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(corpus, sq_norms, queries, qsq)
+    return vals, idx

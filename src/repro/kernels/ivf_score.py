@@ -1,0 +1,89 @@
+"""Pallas kernel: IVF probed-slab scoring with scalar-prefetched list ids.
+
+The IVF corpus is stored grouped-by-list as a dense (nlist, max_list, d)
+slab array. The probe ids selected by the coarse quantizer are passed as a
+scalar-prefetch operand so the BlockSpec index_map can route each grid step's
+DMA directly to the probed slab — the TPU idiom for data-dependent gathers
+(the block-table indirection pattern), replacing the GPU's per-row gather.
+
+A running top-k accumulates across the sequential probe grid dimension, so
+only nprobe/nlist of the corpus is ever read.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_score_topk import _select_topk, NEG_INF
+
+
+def _kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref, idx_ref,
+            *, k: int, max_list: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    slab = slab_ref[...][0]            # (max_list, d)
+    sq = sq_ref[...][0]                # (max_list,)
+    ok = valid_ref[...][0]             # (max_list,) float 0/1
+    q = q_ref[...]                     # (d,)
+
+    s = 2.0 * jnp.dot(slab, q, preferred_element_type=jnp.float32) - sq
+    s = jnp.where(ok > 0.5, s, NEG_INF)[None, :]        # (1, max_list)
+    list_id = probes_ref[j]
+    gids = (list_id * max_list
+            + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+
+    cat_v = jnp.concatenate([vals_ref[...], s], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k: int, *,
+                   interpret: bool = True):
+    """Single-query probed search.
+
+    grouped: (nlist, max_list, d); grouped_sq: (nlist, max_list);
+    valid: (nlist, max_list) float 0/1; probes: (nprobe,) int32;
+    query: (d,). Returns (vals (k,), flat_ids (k,)) with flat ids into
+    grouped.reshape(-1, d). Scores are 2<x,q> - ||x||^2 (monotone in
+    negative squared distance — the ||q||^2 constant is dropped).
+    """
+    nlist, max_list, d = grouped.shape
+    nprobe = probes.shape[0]
+    kernel = functools.partial(_kernel, k=k, max_list=max_list)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nprobe,),
+        in_specs=[
+            pl.BlockSpec((1, max_list, d), lambda j, probes: (probes[j], 0, 0)),
+            pl.BlockSpec((1, max_list), lambda j, probes: (probes[j], 0)),
+            pl.BlockSpec((1, max_list), lambda j, probes: (probes[j], 0)),
+            pl.BlockSpec((d,), lambda j, probes: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda j, probes: (0, 0)),
+            pl.BlockSpec((1, k), lambda j, probes: (0, 0)),
+        ),
+    )
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(probes, grouped, grouped_sq, valid, query)
+    return vals[0], idx[0]

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU they compile
+natively. ``use_pallas=False`` falls back to the pure-jnp oracles — the
+serving engine exposes this as a config switch so every call site can be
+A/B-checked against the reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fcvi_transform import fused_transform as _fused_transform
+from repro.kernels.fused_score_topk import score_topk as _score_topk
+from repro.kernels.rescore import rescore as _rescore
+from repro.kernels.ivf_score import ivf_score_topk as _ivf_score_topk
+from repro.kernels.pq_lut import pq_score as _pq_score
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
+                    *, use_pallas: bool = True, block_rows: int = 256):
+    if not use_pallas:
+        return ref.ref_fused_transform(v, f, proj, alpha, mean_v, std_v,
+                                       mean_f, std_f)
+    return _fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
+                            block_rows=block_rows, interpret=_interpret())
+
+
+def score_topk(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
+               block_rows: int = 128, block_q: int = 64):
+    if not use_pallas:
+        return ref.ref_score_topk(corpus, sq_norms, queries, k)
+    return _score_topk(corpus, sq_norms, queries, k, block_rows=block_rows,
+                       block_q=block_q, interpret=_interpret())
+
+
+def rescore(cand_v, cand_f, qn, fqn, lam, *, use_pallas: bool = True,
+            block_b: int = 8):
+    if not use_pallas:
+        return ref.ref_rescore(cand_v, cand_f, qn, fqn, lam)
+    return _rescore(cand_v, cand_f, qn, fqn, lam, block_b=block_b,
+                    interpret=_interpret())
+
+
+def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k, *,
+                   use_pallas: bool = True):
+    if not use_pallas:
+        return ref.ref_ivf_score_topk(grouped, grouped_sq, valid > 0.5,
+                                      probes, query, k)
+    return _ivf_score_topk(grouped, grouped_sq, valid, probes, query, k,
+                           interpret=_interpret())
+
+
+def pq_score(codes, lut, *, use_pallas: bool = True, block_rows: int = 512):
+    if not use_pallas:
+        return ref.ref_pq_score(codes, lut)
+    return _pq_score(codes, lut, block_rows=block_rows,
+                     interpret=_interpret())

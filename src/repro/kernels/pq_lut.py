@@ -1,0 +1,55 @@
+"""Pallas kernel: PQ ADC scoring — LUT gather-accumulate as one-hot matmuls.
+
+scores[n] = sum_m lut[m, codes[n, m]]
+
+GPU PQ kernels use per-lane shared-memory gathers; the TPU adaptation turns
+each subspace's gather into a (rows x ksub) one-hot times (ksub,) LUT-column
+product, which the MXU executes at full rate and which needs no dynamic
+addressing. codes stream through VMEM in row blocks; the LUT stays resident
+(M x ksub floats, a few KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK_ROWS = 512
+
+
+def _kernel(codes_ref, lut_ref, out_ref, *, ksub: int):
+    codes = codes_ref[...]            # (bn, M) int32
+    lut = lut_ref[...]                # (M, ksub)
+    bn, m = codes.shape
+    total = jnp.zeros((bn,), jnp.float32)
+    for j in range(m):                # M is small + static: unrolled
+        onehot = (codes[:, j][:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (bn, ksub), 1))
+        total = total + jnp.dot(onehot.astype(jnp.float32), lut[j],
+                                preferred_element_type=jnp.float32)
+    out_ref[...] = total.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pq_score(codes, lut, *, block_rows: int = DEF_BLOCK_ROWS,
+             interpret: bool = True):
+    """codes: (n, M) int32; lut: (M, ksub) f32. Returns squared dists (n,)."""
+    n, m = codes.shape
+    ksub = lut.shape[-1]
+    block_rows = min(block_rows, n)
+    if n % block_rows:
+        raise ValueError(f"n={n} must divide by block_rows={block_rows}")
+    kernel = functools.partial(_kernel, ksub=ksub)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, ksub), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the semantic ground truth; kernel tests sweep
+shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def partition_matrix(d: int, m: int, dtype=jnp.float32) -> Array:
+    """P in R^{m x d} with P[i, j] = 1 iff j % m == i.
+
+    psi_partition(v, f, a) == v - a * (f @ P): subtracting f from every
+    m-segment equals one (m x d) matmul — this turns all three psi variants
+    into the same fused kernel (partition: P; embedding: W^T; cluster: P
+    applied to substituted centers).
+    """
+    cols = jnp.arange(d) % m
+    return (cols[None, :] == jnp.arange(m)[:, None]).astype(dtype)
+
+
+def ref_fused_transform(v: Array, f: Array, proj: Array, alpha,
+                        mean_v: Array, std_v: Array,
+                        mean_f: Array, std_f: Array) -> Array:
+    """Fused normalize + psi: ((v-mu)/sd) - alpha * ((f-mu_f)/sd_f) @ proj."""
+    vn = (v - mean_v) / std_v
+    fn = (f - mean_f) / std_f
+    return vn - alpha * (fn @ proj)
+
+
+def ref_score_topk(corpus: Array, sq_norms: Array, queries: Array, k: int):
+    """Exact negative-squared-L2 top-k: the serving inner loop."""
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    scores = -(q2 - 2.0 * queries @ corpus.T + sq_norms[None, :])
+    return jax.lax.top_k(scores, k)
+
+
+def ref_rescore(cand_v: Array, cand_f: Array, qn: Array, fqn: Array, lam):
+    """Combined cosine score per candidate (Alg. 1 line 13).
+
+    cand_v: (b, kp, d); cand_f: (b, kp, m); qn: (b, d); fqn: (b, m).
+    """
+    def cos(a, b):
+        num = jnp.sum(a * b, axis=-1)
+        den = (jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-8)
+        return num / den
+
+    s_v = cos(cand_v, qn[:, None, :])
+    s_f = cos(cand_f, fqn[:, None, :])
+    return lam * s_v + (1.0 - lam) * s_f
+
+
+def ref_ivf_score_topk(grouped: Array, grouped_sq: Array, valid: Array,
+                       probes: Array, query: Array, k: int):
+    """IVF probed-slab scoring for ONE query.
+
+    grouped: (nlist, max_list, d) corpus grouped by list; valid: (nlist,
+    max_list) bool; probes: (nprobe,) list ids. Returns (vals, flat_ids)
+    where flat_ids index into grouped.reshape(-1, d).
+    """
+    slabs = grouped[probes]            # (nprobe, max_list, d)
+    sq = grouped_sq[probes]
+    ok = valid[probes]
+    q2 = jnp.sum(query * query)
+    s = -(q2 - 2.0 * slabs @ query + sq)
+    s = jnp.where(ok, s, -jnp.inf)
+    max_list = grouped.shape[1]
+    flat_ids = probes[:, None] * max_list + jnp.arange(max_list)[None, :]
+    s = s.reshape(-1)
+    vals, pos = jax.lax.top_k(s, k)
+    return vals, flat_ids.reshape(-1)[pos]
+
+
+def ref_pq_score(codes: Array, lut: Array) -> Array:
+    """ADC: scores (n,) = sum_m lut[m, codes[n, m]] (squared distances)."""
+    n, m = codes.shape
+    per = jnp.take_along_axis(lut.T[None, :, :], codes[:, None, :], axis=1)[:, 0, :]
+    return jnp.sum(per, axis=-1)

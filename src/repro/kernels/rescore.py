@@ -1,0 +1,60 @@
+"""Pallas kernel: fused combined-score re-ranking (Alg. 1 line 13).
+
+score = lam * cos(v_i, q) + (1 - lam) * cos(f_i, F_q)
+
+Both cosine similarities, their norms and the affine combine are fused into
+one VMEM pass over the gathered candidate tile, so re-scoring costs one read
+of the (kp x d) candidate block instead of four separate elementwise passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK_B = 8
+
+
+def _kernel(cv_ref, cf_ref, q_ref, fq_ref, lam_ref, out_ref):
+    cv = cv_ref[...]                  # (bb, kp, d)
+    cf = cf_ref[...]                  # (bb, kp, m)
+    q = q_ref[...]                    # (bb, d)
+    fq = fq_ref[...]                  # (bb, m)
+    lam = lam_ref[0]
+
+    def cos(a, b):  # a: (bb, kp, x), b: (bb, x)
+        num = jnp.sum(a * b[:, None, :], axis=-1)
+        na = jnp.sqrt(jnp.sum(a * a, axis=-1))
+        nb = jnp.sqrt(jnp.sum(b * b, axis=-1))
+        return num / (na * nb[:, None] + 1e-8)
+
+    out_ref[...] = (lam * cos(cv, q) + (1.0 - lam) * cos(cf, fq)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def rescore(cand_v, cand_f, qn, fqn, lam, *, block_b: int = DEF_BLOCK_B,
+            interpret: bool = True):
+    """cand_v: (b, kp, d); cand_f: (b, kp, m); qn: (b, d); fqn: (b, m)."""
+    b, kp, d = cand_v.shape
+    m = cand_f.shape[-1]
+    block_b = min(block_b, b)
+    if b % block_b:
+        raise ValueError(f"b={b} must be divisible by block_b={block_b}")
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, kp, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, kp, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kp), jnp.float32),
+        interpret=interpret,
+    )(cand_v, cand_f, qn, fqn, lam_arr)

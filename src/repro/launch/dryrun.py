@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the device
+count at first init. 512 placeholder host devices back the production meshes
+(16x16 single-pod, 2x16x16 multi-pod); nothing is allocated or executed:
+inputs are ShapeDtypeStructs and the deliverable is the compiled artifact's
+memory_analysis / cost_analysis / collective schedule, written to
+artifacts/dryrun/<arch>_<shape>_<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import AxisRules, use_rules
+from repro.launch import hlo_analysis as H
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+# per-(arch, shape) microbatching for train cells that need activation relief
+N_MICRO = {
+    ("dbrx-132b", "train_4k"): 16,
+    ("internvl2-26b", "train_4k"): 8,
+    ("gemma2-27b", "train_4k"): 8,
+    ("mistral-nemo-12b", "train_4k"): 8,
+    ("whisper-large-v3", "train_4k"): 8,
+    ("starcoder2-7b", "train_4k"): 4,
+    ("gemma3-1b", "train_4k"): 2,
+    ("recurrentgemma-2b", "train_4k"): 2,
+    ("granite-moe-3b-a800m", "train_4k"): 4,
+}
+
+
+def to_shardings(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _bf16_arg_bytes_per_device(mesh, cell) -> int:
+    """Per-device bytes of bf16 input arguments (weights + caches)."""
+    import numpy as np
+    import jax.numpy as jnp
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def shard_div(spec, shape):
+        div = 1
+        entries = list(spec) if spec is not None else []
+        for e in entries[: len(shape)]:
+            if e is None:
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            for a in axes:
+                div *= sizes.get(a, 1)
+        return div
+
+    total = 0
+    for sds_tree, spec_tree in zip(cell.in_sds, cell.in_pspecs):
+        leaves_s = jax.tree_util.tree_leaves(sds_tree)
+        leaves_p = jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        if len(leaves_p) != len(leaves_s):
+            leaves_p = [None] * len(leaves_s)
+        for sd, sp in zip(leaves_s, leaves_p):
+            if sd.dtype == jnp.bfloat16:
+                n = int(np.prod(sd.shape)) if sd.shape else 1
+                total += (n * 2) // max(shard_div(sp, sd.shape), 1)
+    return total
+
+
+def active_params(cfg: M.ModelConfig, param_sds) -> int:
+    """Active (per-token) parameter count — experts counted top_k/E."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_sds)[0]:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if cfg.is_moe and ("we_in" in pstr or "we_gate" in pstr or "we_out" in pstr):
+            n = int(n * cfg.moe_top_k / cfg.moe_experts)
+        total += n
+    return total
+
+
+def tokens_of(cfg, shape: str) -> int:
+    info = S.SHAPES[shape]
+    if info["kind"] == "train":
+        seq = S.WHISPER_DEC_LEN + info["seq"] if cfg.enc_dec else info["seq"]
+        return info["batch"] * seq
+    if info["kind"] == "prefill":
+        return info["batch"] * info["seq"]
+    return info["batch"]  # decode: 1 new token per sequence
+
+
+# §Perf hillclimb variants: hypothesis -> change, measured against the
+# baseline artifact of the same (arch, shape). See EXPERIMENTS.md §Perf.
+VARIANTS = {
+    # H1: xlstm replicates its mixers over 'model' (16x redundant compute,
+    # useful=11%). Change: pure 256-way DP (batch over data x model).
+    "xlstm-dp256": dict(arch="xlstm-125m", shape="train_4k",
+                        extra_rules={"batch": ("data", "model"),
+                                     "vocab": None}),  # pure 256-way DP
+    # H2: granite's replicated-experts MoE with ff TP psums the full
+    # (G,E,C,d) out_buf every layer. Change: replicate expert ff too
+    # (zero MoE collectives, ~5x cheap expert FLOPs).
+    "granite-repl-ff": dict(arch="granite-moe-3b-a800m", shape="train_4k",
+                            extra_rules={"moe_ff": None}),
+    # H2b: granite intermediate — experts replicated but ZeRO over data only
+    "granite-repl-ff-m4": dict(arch="granite-moe-3b-a800m", shape="train_4k",
+                               extra_rules={"moe_ff": None}, n_micro=2),
+    # H3: the paper's own serving step — precision + probing ladders
+    "fcvi-bf16": dict(arch="fcvi", shape="serve_268m", fcvi_variant="bf16"),
+    "fcvi-ivf8": dict(arch="fcvi", shape="serve_268m", fcvi_variant="ivf8"),
+    # H3 iter 3: probing leaves the k'-merge all-gathers dominant -> truncate
+    # per-shard candidates to top-64 before the merge tree
+    "fcvi-ivf8-trunc": dict(arch="fcvi", shape="serve_268m",
+                            fcvi_variant="ivf8-trunc"),
+    # H3 iter 4: the rescore gather moves 210MB of candidate vectors ->
+    # compute-to-data partial cosines + psum of 4x(b,k') scores (~6MB)
+    "fcvi-opt": dict(arch="fcvi", shape="serve_268m", fcvi_variant="opt"),
+}
+
+
+def run_fcvi_cell(shape: str, multi_pod: bool, verbose: bool = True,
+                  fcvi_variant: str = "base", tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": "fcvi", "shape": shape + tag, "mesh": mesh_name,
+              "variant": fcvi_variant}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = S.build_fcvi_cell(shape, mesh, variant=fcvi_variant)
+    with use_rules(cell.rules):
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=to_shardings(mesh, cell.in_pspecs),
+                         out_shardings=to_shardings(mesh, cell.out_pspecs))
+        lowered = jitted.lower(*cell.in_sds)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    hc = H.analyze(hlo)
+    bytes_acc = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + 2 * ma.temp_size_in_bytes - 2 * ma.alias_size_in_bytes)
+    terms = H.roofline_terms(hc["flops"], bytes_acc, hc["collective_bytes"])
+    info = S.FCVI_SHAPES[shape]
+    # useful work: 2*N*d FLOPs of exact scoring per query batch
+    mf = 2.0 * info["n"] * info["d"] * info["batch"]
+    n_dev = mesh.devices.size
+    result.update(
+        status="ok", kind="fcvi_serve", n_micro=1,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory_analysis={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        per_device_flops=hc["flops"], per_device_bytes=bytes_acc,
+        per_device_collective_bytes=hc["collective_bytes"],
+        collectives=hc["collectives"], roofline=terms,
+        params_total=0, params_active=0, model_flops_global=mf,
+        useful_flops_fraction=mf / (hc["flops"] * n_dev) if hc["flops"] else 0,
+        hlo_len=len(hlo), hlo_text_bytes=hc["bytes"],
+    )
+    if verbose:
+        peak_gb = result["memory_analysis"]["peak_estimate_bytes"] / 2**30
+        print(f"[fcvi {shape} {mesh_name}] ok lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s peak/dev={peak_gb:.2f}GiB "
+              f"flops/dev={hc['flops']:.3g} coll/dev={hc['collective_bytes']:.3g}B "
+              f"dominant={terms['dominant']} useful={result['useful_flops_fraction']:.2%}")
+    return result
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             extra_rules=None, n_micro_override=None, tag: str = "") -> dict:
+    if arch == "fcvi":
+        return run_fcvi_cell(shape, multi_pod, verbose, tag=tag)
+    cfg = get_config(arch)
+    ok, reason = S.cell_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape + tag, "mesh": mesh_name}
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_micro = n_micro_override or N_MICRO.get((arch, shape), 1)
+
+    t0 = time.time()
+    cell = S.build_cell(cfg, arch, shape, mesh, n_micro=n_micro,
+                        extra_rules=extra_rules)
+    with use_rules(cell.rules):
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=to_shardings(mesh, cell.in_pspecs),
+            out_shardings=to_shardings(mesh, cell.out_pspecs),
+            donate_argnums=cell.donate,
+        )
+        lowered = jitted.lower(*cell.in_sds)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    hc = H.analyze(hlo)          # loop-aware HLO accounting (per-device)
+    colls = hc["collectives"]
+    coll_bytes = hc["collective_bytes"]
+    flops = hc["flops"]
+    # memory-traffic model: every argument/output touched once, every live
+    # temp written + read once. (HLO-text bytes kept as diagnostic — it
+    # overcounts buffers referenced from loop-body fusions.)
+    bytes_acc = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + 2 * ma.temp_size_in_bytes - 2 * ma.alias_size_in_bytes)
+    terms = H.roofline_terms(flops, bytes_acc, coll_bytes)
+    xla_flops = float(ca.get("flops", 0.0)) if isinstance(ca, dict) else 0.0
+
+    # CPU-backend correction: XLA:CPU materialises f32 copies of every bf16
+    # dot operand (no native bf16 GEMM) and hoists stacked-weight converts
+    # out of the layer loop; the TPU MXU consumes bf16 natively. Projected
+    # TPU peak subtracts those 2x-bf16-argument copies.
+    bf16_arg_bytes = _bf16_arg_bytes_per_device(mesh, cell)
+    projected_tpu_peak = max(
+        0,
+        ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        - 2 * bf16_arg_bytes)
+
+    param_sds = cell.in_sds[0]
+    n_active = active_params(cfg, param_sds)
+    n_total = sum(int(__import__("numpy").prod(l.shape))
+                  for l in jax.tree.leaves(param_sds))
+    mf = H.model_flops(n_active, tokens_of(cfg, shape), cell.kind)
+    n_dev = mesh.devices.size
+    useful = mf / (flops * n_dev) if flops else 0.0
+
+    result.update(
+        status="ok",
+        kind=cell.kind,
+        n_micro=n_micro,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory_analysis={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+            "projected_tpu_peak_bytes": projected_tpu_peak,
+            "bf16_arg_bytes_per_device": bf16_arg_bytes,
+        },
+        per_device_flops=flops,
+        per_device_bytes=bytes_acc,
+        xla_cost_analysis_flops=xla_flops,
+        hlo_text_bytes=hc["bytes"],
+        per_device_collective_bytes=coll_bytes,
+        collectives=colls,
+        roofline=terms,
+        params_total=n_total,
+        params_active=n_active,
+        model_flops_global=mf,
+        useful_flops_fraction=useful,
+        hlo_len=len(hlo),
+    )
+    if verbose:
+        peak_gb = result["memory_analysis"]["peak_estimate_bytes"] / 2**30
+        print(f"[{arch} {shape} {mesh_name}] ok "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"peak/dev={peak_gb:.2f}GiB flops/dev={flops:.3g} "
+              f"coll/dev={coll_bytes:.3g}B dominant={terms['dominant']} "
+              f"useful={useful:.2%}")
+        print(f"  memory_analysis: {ma}")
+    return result
+
+
+def save_result(res: dict):
+    os.makedirs(ART_DIR, exist_ok=True)
+    name = f"{res['arch']}_{res['shape']}_{res['mesh']}.json"
+    with open(os.path.join(ART_DIR, name), "w") as f:
+        json.dump(res, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(S.SHAPES) + list(S.FCVI_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    if args.variant:
+        v = VARIANTS[args.variant]
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        for mp in meshes:
+            if v["arch"] == "fcvi":
+                res = run_fcvi_cell(v["shape"], mp,
+                                    fcvi_variant=v["fcvi_variant"],
+                                    tag="_" + args.variant)
+            else:
+                res = run_cell(v["arch"], v["shape"], mp,
+                               extra_rules=v.get("extra_rules"),
+                               n_micro_override=v.get("n_micro"),
+                               tag="_" + args.variant)
+            save_result(res)
+        return
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = [(a, sh) for a in archs for sh in shapes if a != "fcvi"]
+    if args.all or args.arch == "fcvi":
+        fshapes = list(S.FCVI_SHAPES) if args.shape is None else \
+            [sh for sh in [args.shape] if sh in S.FCVI_SHAPES]
+        cells += [("fcvi", sh) for sh in fshapes]
+    if args.arch == "fcvi":
+        cells = [(a, sh) for (a, sh) in cells if a == "fcvi"]
+
+    failures = []
+    for arch, shape in cells:
+            for mp in meshes:
+                if args.skip_existing:
+                    nm = f"{arch}_{shape}_{'pod2x16x16' if mp else 'pod16x16'}.json"
+                    pth = os.path.join(ART_DIR, nm)
+                    if os.path.exists(pth):
+                        with open(pth) as fh:
+                            if json.load(fh).get("status") in ("ok", "skipped"):
+                                print(f"[{arch} {shape} mp={mp}] cached, skipping")
+                                continue
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(res)
+                save_result(res)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f["arch"], f["shape"], f["mesh"], f["error"])
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever this process actually has (tests / local runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,140 @@
+"""Building-block layers (pure functions over param dicts).
+
+Everything is functional: ``init_*`` returns a param dict; ``apply``-style
+functions are pure. Compute dtype is bf16 (cast at entry of each matmul),
+params and reductions stay f32 — the standard large-scale recipe.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _normal(rng, shape, std):
+    return (std * jax.random.normal(rng, shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rms_norm(params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(rng, vocab: int, d: int):
+    return {"embedding": _normal(rng, (vocab, d), 1.0 / math.sqrt(d))}
+
+
+def embed(params, tokens: Array) -> Array:
+    return params["embedding"][tokens].astype(COMPUTE_DTYPE)
+
+
+def unembed(params, x: Array, tied_embedding: Optional[Array] = None) -> Array:
+    w = tied_embedding.T if tied_embedding is not None else params["lm_head"]
+    return jnp.dot(x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+
+
+def init_unembed(rng, d: int, vocab: int):
+    return {"lm_head": _normal(rng, (d, vocab), 1.0 / math.sqrt(d))}
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (b, s, h, dh); positions: (b, s) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, d_ff: int, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    std_in, std_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {"w_in": _normal(k1, (d, d_ff), std_in),
+         "w_out": _normal(k3, (d_ff, d), std_out)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = _normal(k2, (d, d_ff), std_in)
+    return p
+
+
+def apply_mlp(params, x: Array, kind: str = "swiglu") -> Array:
+    xc = x.astype(COMPUTE_DTYPE)
+    h = jnp.dot(xc, params["w_in"].astype(COMPUTE_DTYPE))
+    if kind == "swiglu":
+        g = jnp.dot(xc, params["w_gate"].astype(COMPUTE_DTYPE))
+        h = jax.nn.silu(g) * h
+    elif kind == "geglu":
+        g = jnp.dot(xc, params["w_gate"].astype(COMPUTE_DTYPE))
+        h = jax.nn.gelu(g) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    from repro.distributed.sharding import shard_act
+    h = shard_act(h, "batch", None, "ff")
+    return jnp.dot(h, params["w_out"].astype(COMPUTE_DTYPE))
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x.astype(jnp.float32) / cap)

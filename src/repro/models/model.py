@@ -1,0 +1,572 @@
+"""Unified LM covering all 10 assigned architecture families.
+
+A model is a cycled ``pattern`` of block kinds over ``n_layers``:
+  "attn"   — global causal attention (+RoPE, softcap optional)
+  "local"  — sliding-window causal attention
+  "rec"    — RG-LRU recurrent block (Griffin / RecurrentGemma)
+  "mlstm"  — xLSTM matrix-memory block (chunkwise-parallel)
+  "slstm"  — xLSTM scalar-memory block (sequential scan)
+Each block is [norm -> mixer -> residual] + [norm -> MLP|MoE -> residual]
+(pattern-uniform). Layers are grouped into scanned periods (lax.scan over the
+stacked period params — O(1) HLO in depth) plus an unrolled remainder.
+
+Encoder-decoder (whisper) wraps two stacks and adds cross-attention; VLM /
+audio frontends are stubs supplying precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models import attention as attn
+from repro.models import recurrent as rec
+from repro.models.layers import (COMPUTE_DTYPE, apply_mlp, embed, init_embedding,
+                                 init_layernorm, init_mlp, init_rmsnorm,
+                                 init_unembed, layer_norm, rms_norm,
+                                 sinusoidal_positions, softcap, unembed, _normal)
+from repro.models.moe import apply_moe, init_moe
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple = ("attn",)
+    window: int = 4096
+    mlp_kind: str = "swiglu"          # swiglu | geglu | gelu | none
+    norm_kind: str = "rms"            # rms | ln
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    pos_kind: str = "rope"            # rope | sinusoidal | none
+    rope_theta: float = 10000.0
+    post_norm: bool = False
+    embed_scale: bool = False
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: str = "none"            # none | audio_stub | vision_stub
+    n_prefix: int = 0
+    d_rnn: int = 0
+    conv_width: int = 4
+    lstm_chunk: int = 128
+    tie_embeddings: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    banded_causal: bool = False
+    remat: bool = True
+    sub_quadratic: bool = False       # eligible for long_500k
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (TP-divisible; Megatron practice).
+        Pad logits are masked to -inf in the loss; labels never hit the pad."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def rest_kinds(self) -> tuple:
+        return self.pattern[: self.n_layers % self.period]
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def layer_kinds(self) -> list:
+        return [self.pattern[i % self.period] for i in range(self.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg):
+    return init_rmsnorm(cfg.d_model) if cfg.norm_kind == "rms" else init_layernorm(cfg.d_model)
+
+
+def _norm(cfg, p, x):
+    return rms_norm(p, x) if cfg.norm_kind == "rms" else layer_norm(p, x)
+
+
+def init_block(rng, cfg: ModelConfig, kind: str, cross: bool = False):
+    ks = jax.random.split(rng, 8)
+    p: dict = {"norm1": _init_norm(cfg)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim)
+    elif kind == "rec":
+        p["mixer"] = rec.init_rglru(ks[0], cfg.d_model, cfg.d_rnn, cfg.conv_width)
+        p["mixer"].update(rec.init_rglru_out(ks[1], cfg.d_model, cfg.d_rnn))
+    elif kind == "mlstm":
+        p["mixer"] = rec.init_mlstm(ks[0], cfg.d_model, cfg.n_heads, cfg.head_dim)
+    elif kind == "slstm":
+        p["mixer"] = rec.init_slstm(ks[0], cfg.d_model, cfg.n_heads, cfg.head_dim)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if cross:
+        p["norm_cross"] = _init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[2], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim)
+    if cfg.mlp_kind != "none":
+        p["norm2"] = _init_norm(cfg)
+        if cfg.is_moe:
+            p["moe"] = init_moe(ks[3], cfg.d_model, cfg.moe_d_ff, cfg.moe_experts)
+        else:
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    if cfg.post_norm:
+        p["norm1_post"] = _init_norm(cfg)
+        if cfg.mlp_kind != "none":
+            p["norm2_post"] = _init_norm(cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block apply — mode in {"train", "prefill", "decode"}
+# ---------------------------------------------------------------------------
+
+def apply_block(bp, x, cfg: ModelConfig, kind: str, mode: str,
+                cache=None, enc_out=None, cross_cache=None):
+    h = _norm(cfg, bp["norm1"], x)
+    window = cfg.window if kind == "local" else 0
+    new_cache = cache
+    if kind in ("attn", "local"):
+        use_rope = cfg.pos_kind == "rope"
+        if mode == "train":
+            mix = attn.attn_forward(
+                bp["mixer"], h, n_kv=cfg.n_kv_heads, causal=True,
+                window=window, rope_theta=cfg.rope_theta, use_rope=use_rope,
+                cap=cfg.attn_softcap, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                banded_causal=cfg.banded_causal)
+        elif mode == "encode":
+            mix = attn.attn_forward(
+                bp["mixer"], h, n_kv=cfg.n_kv_heads, causal=False,
+                window=0, rope_theta=cfg.rope_theta, use_rope=use_rope,
+                cap=cfg.attn_softcap, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        elif mode == "prefill":
+            mix, new_cache = attn.attn_prefill(
+                bp["mixer"], h, cache, n_kv=cfg.n_kv_heads, window=window,
+                rope_theta=cfg.rope_theta, use_rope=use_rope,
+                cap=cfg.attn_softcap, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        else:  # decode
+            mix, new_cache = attn.attn_decode(
+                bp["mixer"], h, cache, n_kv=cfg.n_kv_heads, window=window,
+                rope_theta=cfg.rope_theta, use_rope=use_rope,
+                cap=cfg.attn_softcap)
+    elif kind == "rec":
+        mix, new_cache = rec.rglru_block(bp["mixer"], h, cache)
+    elif kind == "mlstm":
+        mix, new_cache = rec.mlstm_chunkwise(bp["mixer"], h, cache,
+                                             chunk=min(cfg.lstm_chunk, h.shape[1]))
+    elif kind == "slstm":
+        mix, new_cache = rec.slstm_block(bp["mixer"], h, cache)
+    else:
+        raise ValueError(kind)
+
+    if cfg.post_norm:
+        mix = _norm(cfg, bp["norm1_post"], mix)
+    x = x + mix
+    x = shard_act(x, "batch", None, None)
+
+    if "cross" in bp:
+        hc = _norm(cfg, bp["norm_cross"], x)
+        if cross_cache is not None:
+            ck, cv = cross_cache
+        else:
+            ck, cv = attn.cross_kv(bp["cross"], enc_out)
+        x = x + attn.cross_attend(bp["cross"], hc, ck, cv,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                  cap=cfg.attn_softcap)
+
+    if cfg.mlp_kind != "none":
+        h2 = _norm(cfg, bp["norm2"], x)
+        if cfg.is_moe:
+            ff = apply_moe(bp["moe"], h2, top_k=cfg.moe_top_k,
+                           capacity_factor=cfg.moe_capacity_factor)
+        else:
+            ff = apply_mlp(bp["mlp"], h2, cfg.mlp_kind)
+        if cfg.post_norm:
+            ff = _norm(cfg, bp["norm2_post"], ff)
+        x = x + ff
+        x = shard_act(x, "batch", None, None)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over periods + unrolled remainder)
+# ---------------------------------------------------------------------------
+
+def init_stack(rng, cfg: ModelConfig, n_layers: int, pattern: tuple,
+               cross: bool = False):
+    period = len(pattern)
+    n_periods = n_layers // period
+    rest = pattern[: n_layers % period]
+    keys = jax.random.split(rng, n_periods * period + len(rest))
+
+    def one_period(pk):
+        return [init_block(k, cfg, kind, cross)
+                for k, kind in zip(pk, pattern)]
+
+    periods = [one_period(keys[i * period:(i + 1) * period])
+               for i in range(n_periods)]
+    scan_params = jax.tree.map(lambda *xs: jnp.stack(xs), *periods) \
+        if n_periods > 0 else []
+    rest_params = [init_block(keys[n_periods * period + i], cfg, kind, cross)
+                   for i, kind in enumerate(rest)]
+    return {"scan": scan_params, "rest": rest_params}
+
+
+def apply_stack(sp, x, cfg: ModelConfig, pattern: tuple, mode: str,
+                caches=None, enc_out=None, cross_caches=None):
+    """caches: {"scan": stacked per-slot caches, "rest": list} or None."""
+    has_cache = caches is not None
+    has_cross = cross_caches is not None
+
+    block_fns = {}
+    for kind in set(pattern):
+        def mk(kind):
+            def fn(bp, x, c, cc):
+                return apply_block(bp, x, cfg, kind, mode, c, enc_out, cc)
+            return fn
+        f = mk(kind)
+        if cfg.remat and mode == "train":
+            # inner level of the nested (2-level) remat: during a period's
+            # backward recompute, each block re-saves only its input and is
+            # re-materialised one at a time
+            f = jax.checkpoint(f, prevent_cse=False)
+        block_fns[kind] = f
+
+    def period_body(carry, inp):
+        x = carry
+        pp = inp[0]
+        pc = inp[1] if has_cache else None
+        pcc = inp[2] if has_cross else None
+        new_pc = []
+        for j, kind in enumerate(pattern):
+            c = pc[j] if has_cache else None
+            cc = pcc[j] if has_cross else None
+            x, nc = block_fns[kind](pp[j], x, c, cc)
+            new_pc.append(nc)
+        return x, (new_pc if has_cache else 0)
+
+    body = period_body
+    if cfg.remat and mode == "train":
+        # outer level of the nested remat: the layer scan stores ONE residual
+        # (the period input) per period; blocks recompute on the way back
+        body = jax.checkpoint(period_body, prevent_cse=False)
+
+    if sp["scan"]:
+        xs = [sp["scan"]]
+        if has_cache:
+            xs.append(caches["scan"])
+        if has_cross:
+            xs.append(cross_caches["scan"])
+        x, new_scan = jax.lax.scan(body, x, tuple(xs))
+    else:
+        new_scan = []
+
+    new_rest = []
+    rest = pattern[: len(sp["rest"])]
+    for i, kind in enumerate(rest):
+        c = caches["rest"][i] if has_cache else None
+        cc = cross_caches["rest"][i] if has_cross else None
+        x, nc = block_fns[kind](sp["rest"][i], x, c, cc)
+        new_rest.append(nc)
+
+    new_caches = {"scan": new_scan, "rest": new_rest} if has_cache else None
+    return x, new_caches
+
+
+def cfg_n_periods(sp) -> int:
+    leaves = jax.tree.leaves(sp["scan"])
+    return leaves[0].shape[0] if leaves else 0
+
+
+def _dummy(n: int):
+    return jnp.zeros((n,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 6)
+    params: dict = {"embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model)}
+    if cfg.enc_dec:
+        params["encoder"] = init_stack(ks[1], cfg, cfg.n_enc_layers, ("attn",))
+        params["enc_norm"] = _init_norm(cfg)
+        params["decoder"] = init_stack(ks[2], cfg, cfg.n_layers, cfg.pattern,
+                                       cross=True)
+    else:
+        params["decoder"] = init_stack(ks[2], cfg, cfg.n_layers, cfg.pattern)
+    params["final_norm"] = _init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_unembed(ks[3], cfg.d_model, cfg.padded_vocab)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, tokens):
+    x = embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos_kind == "sinusoidal":
+        pe = sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = x + pe[None].astype(x.dtype)
+    return shard_act(x, "batch", None, None)
+
+
+def _logits(params, cfg, x):
+    x = _norm(cfg, params["final_norm"], x)
+    tied = params["embed"]["embedding"] if cfg.tie_embeddings else None
+    lg = unembed(params.get("unembed", {}), x, tied_embedding=tied)
+    lg = softcap(lg, cfg.final_softcap)
+    return shard_act(lg, "batch", None, "vocab")
+
+
+def encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    if cfg.pos_kind == "sinusoidal":
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = shard_act(x, "batch", None, None)
+    x, _ = apply_stack(params["encoder"], x, cfg, ("attn",), "encode")
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Teacher-forced full-sequence final hidden states (pre-unembed)."""
+    tokens = batch["tokens"]
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["frames"])
+        x = _embed_in(params, cfg, tokens)
+        x, _ = apply_stack(params["decoder"], x, cfg, cfg.pattern, "train",
+                           enc_out=enc_out)
+    else:
+        x = _embed_in(params, cfg, tokens)
+        if cfg.frontend == "vision_stub":
+            px = batch["patches"].astype(COMPUTE_DTYPE)
+            x = jnp.concatenate([px, x], axis=1)
+        elif cfg.frontend == "audio_stub" and "frames" in batch:
+            fx = batch["frames"].astype(COMPUTE_DTYPE)
+            x = jnp.concatenate([fx, x], axis=1)
+        x = shard_act(x, "batch", None, None)
+        x, _ = apply_stack(params["decoder"], x, cfg, cfg.pattern, "train")
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Teacher-forced full-sequence logits (training path)."""
+    return _logits(params, cfg, forward_hidden(params, cfg, batch))
+
+
+# ---------------------------------------------------------------------------
+# Caches / serving
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind == "attn":
+        return attn.init_kv_cache(batch, cfg.n_kv_heads, cfg.head_dim, max_len)
+    if kind == "local":
+        return attn.init_kv_cache(batch, cfg.n_kv_heads, cfg.head_dim, max_len,
+                                  window=cfg.window)
+    if kind == "rec":
+        return rec.init_rglru_cache(batch, cfg.d_rnn, cfg.conv_width)
+    if kind == "mlstm":
+        return rec.init_mlstm_cache(batch, cfg.n_heads, cfg.head_dim)
+    if kind == "slstm":
+        return rec.init_slstm_cache(batch, cfg.n_heads, cfg.head_dim)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    def stack_caches(kind):
+        per = [_block_cache(cfg, kind, batch, max_len)
+               for _ in range(cfg.n_periods)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    scan_c = [stack_caches(kind) for kind in cfg.pattern] if cfg.n_periods else []
+    rest_c = [_block_cache(cfg, kind, batch, max_len) for kind in cfg.rest_kinds]
+    return {"scan": scan_c, "rest": rest_c}
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, enc_len: int):
+    def one():
+        shape = (batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, COMPUTE_DTYPE), jnp.zeros(shape, COMPUTE_DTYPE))
+
+    per = [jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[one() for _ in range(cfg.n_periods)])
+           for _ in cfg.pattern]
+    rest = [one() for _ in cfg.rest_kinds]
+    return {"scan": per, "rest": rest}
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out: Array):
+    """Precompute per-layer cross K/V from encoder output."""
+    dp = params["decoder"]
+
+    def plain_kv(cp):  # shard_act-free (vmap-safe) version of attn.cross_kv
+        xc = enc_out.astype(COMPUTE_DTYPE)
+        k = jnp.einsum("bsd,dhk->bshk", xc, cp["wk"].astype(COMPUTE_DTYPE))
+        v = jnp.einsum("bsd,dhk->bshk", xc, cp["wv"].astype(COMPUTE_DTYPE))
+        return k, v
+
+    def per_slot(slot_params):
+        return jax.vmap(lambda pp: plain_kv(pp["cross"]))(slot_params)
+
+    scan_cc = [per_slot(dp["scan"][j])
+               for j in range(len(cfg.pattern))] if dp["scan"] else []
+    rest_cc = [plain_kv(bp["cross"]) for bp in dp["rest"]]
+    return {"scan": scan_cc, "rest": rest_cc}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Process the prompt; returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache = init_cache(cfg, b, max_len)
+    cross_caches = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["frames"])
+        cross_caches = build_cross_cache(params, cfg, enc_out)
+        x = _embed_in(params, cfg, tokens)
+    else:
+        x = _embed_in(params, cfg, tokens)
+        if cfg.frontend == "vision_stub":
+            x = jnp.concatenate([batch["patches"].astype(COMPUTE_DTYPE), x], axis=1)
+        elif cfg.frontend == "audio_stub" and "frames" in batch:
+            x = jnp.concatenate([batch["frames"].astype(COMPUTE_DTYPE), x], axis=1)
+    x, cache = apply_stack(params["decoder"], x, cfg, cfg.pattern, "prefill",
+                           caches=cache, cross_caches=cross_caches)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"self": cache, "cross": cross_caches}
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, cache: dict):
+    """token: (b, 1) -> (logits (b, 1, V), new cache)."""
+    x = _embed_in_decode(params, cfg, token, cache)
+    x, new_self = apply_stack(params["decoder"], x, cfg, cfg.pattern, "decode",
+                              caches=cache["self"],
+                              cross_caches=cache.get("cross"))
+    logits = _logits(params, cfg, x)
+    return logits, {"self": new_self, "cross": cache.get("cross")}
+
+
+def _embed_in_decode(params, cfg, token, cache):
+    x = embed(params["embed"], token)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos_kind == "sinusoidal":
+        pos = _cache_pos(cfg, cache)
+        pe = sinusoidal_positions(1, cfg.d_model)  # placeholder; use pos below
+        div = jnp.exp(jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+                      * (-math.log(10000.0) / cfg.d_model))
+        ang = pos.astype(jnp.float32) * div
+        pe = jnp.zeros((cfg.d_model,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+        x = x + pe[None, None, :].astype(x.dtype)
+    return shard_act(x, "batch", None, None)
+
+
+def _cache_pos(cfg, cache):
+    """Current decode position from the first attention cache found."""
+    sc = cache["self"]
+    for j, kind in enumerate(cfg.pattern):
+        if kind in ("attn", "local") and sc["scan"]:
+            return sc["scan"][j]["pos"][0]
+    for i, kind in enumerate(cfg.rest_kinds):
+        if kind in ("attn", "local"):
+            return sc["rest"][i]["pos"]
+    return jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch: dict,
+            seq_chunk: int = 512) -> tuple:
+    """Next-token cross-entropy with a sequence-chunked, rematerialised
+    unembedding: the (b, s, V) logits tensor never exists — each chunk's
+    logits are computed, reduced to (logz, gold) scalars-per-token, and
+    recomputed in the backward pass (jax.checkpoint). Cuts the loss-head
+    peak memory by s/seq_chunk (~60x for the 262k-vocab archs).
+
+    Prefix positions (patches/frames for decoder-only frontends) are
+    excluded via the label mask."""
+    x = forward_hidden(params, cfg, batch)          # (b, s_total, d)
+    tokens = batch["tokens"]
+    n_prefix = x.shape[1] - tokens.shape[1]
+    x = x[:, n_prefix:]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+
+    b, s, d = x.shape
+    seq_chunk = min(seq_chunk, s)
+    pad = (-s) % seq_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = (s + pad) // seq_chunk
+
+    def resh(t):
+        t = t.reshape(b, nch, seq_chunk, *t.shape[2:])
+        return jnp.moveaxis(t, 1, 0)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_nll(xc, lc, mc):
+        lg = _logits(params, cfg, xc).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            lg = jnp.where(valid, lg, -1e30)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mc), jnp.sum(logz * mc)
+
+    def body(carry, inp):
+        nll_sum, logz_sum = carry
+        nll_c, logz_c = chunk_nll(*inp)
+        return (nll_sum + nll_c, logz_sum + logz_c), None
+
+    (nll, logz_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (resh(x), resh(labels), resh(mask)))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll / denom
+    metrics = {"loss": loss, "ppl_log": loss,
+               "tokens": denom, "logz_mean": logz_sum / denom}
+    return loss, metrics

@@ -1,0 +1,320 @@
+"""Recurrent mixers: RG-LRU (Griffin/RecurrentGemma) and xLSTM (mLSTM/sLSTM).
+
+TPU adaptation notes (DESIGN.md §6):
+* RG-LRU is a diagonal linear recurrence -> jax.lax.associative_scan
+  (log-depth, parallel) instead of the paper's sequential CUDA kernel.
+* mLSTM uses the chunkwise-parallel formulation (intra-chunk quadratic on the
+  MXU + inter-chunk state scan) — O(S*L) memory, exact, trains through scan.
+* sLSTM has true hidden-to-hidden recurrence (non-parallelizable by design);
+  it runs as a sequential lax.scan with f32 stabilized exponential gating.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.layers import COMPUTE_DTYPE, _normal
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Temporal (depthwise causal) conv — Griffin's width-4 conv
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: Array, w: Array, state: Optional[Array] = None):
+    """x: (b, s, c); w: (width, c) depthwise. state: (b, width-1, c) history.
+
+    Returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def init_rglru(rng, d: int, d_rnn: int, conv_width: int = 4):
+    ks = jax.random.split(rng, 6)
+    std = 1.0 / math.sqrt(d)
+    stdr = 1.0 / math.sqrt(d_rnn)
+    # Lambda init so a = sigmoid(lam)^(c*r) sits in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / RGLRU_C) / (1 - u ** (1.0 / RGLRU_C)))
+    return {
+        "w_rnn_in": _normal(ks[0], (d, d_rnn), std),
+        "w_rnn_gate": _normal(ks[1], (d, d_rnn), std),
+        "conv_w": _normal(ks[2], (conv_width, d_rnn), stdr),
+        "w_gate_a": _normal(ks[3], (d_rnn, d_rnn), stdr),
+        "w_gate_x": _normal(ks[4], (d_rnn, d_rnn), stdr),
+        "lam": lam,
+    }
+
+
+def _rglru_gates(params, u: Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_gate_a"])
+    i = jax.nn.sigmoid(uf @ params["w_gate_x"])
+    log_a = -RGLRU_C * r * jax.nn.softplus(params["lam"])  # log sigmoid(lam)^(c r)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * uf
+
+
+def rglru_scan(a: Array, bx: Array, h0: Optional[Array] = None):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1 via associative scan."""
+    if h0 is not None:
+        # fold initial state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(params, x: Array, cache: Optional[dict] = None):
+    """Griffin recurrent block. x: (b, s, d) -> (b, s, d), new cache.
+
+    cache: {"h": (b, d_rnn) f32, "conv": (b, w-1, d_rnn)} or None (training).
+    """
+    xc = x.astype(COMPUTE_DTYPE)
+    gate = jax.nn.gelu(jnp.dot(xc, params["w_rnn_gate"].astype(COMPUTE_DTYPE)))
+    u = jnp.dot(xc, params["w_rnn_in"].astype(COMPUTE_DTYPE))
+    u = shard_act(u, "batch", None, "rnn")
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = causal_conv1d(u, params["conv_w"].astype(u.dtype), conv_state)
+    a, bx = _rglru_gates(params, u)
+    h0 = cache["h"] if cache is not None else None
+    h = rglru_scan(a, bx, h0)
+    y = (gate.astype(jnp.float32) * h).astype(COMPUTE_DTYPE)
+    out = jnp.dot(y, params["w_rnn_out"].astype(COMPUTE_DTYPE))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1], "conv": new_conv}
+    return out, new_cache
+
+
+def init_rglru_out(rng, d: int, d_rnn: int):
+    return {"w_rnn_out": _normal(rng, (d_rnn, d), 1.0 / math.sqrt(d_rnn))}
+
+
+def init_rglru_cache(batch: int, d_rnn: int, conv_width: int = 4):
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), COMPUTE_DTYPE)}
+
+
+def rglru_decode(params, x: Array, cache: dict):
+    """Single-token step. x: (b, 1, d)."""
+    return rglru_block(params, x, cache)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng, d: int, n_heads: int, head_dim: int):
+    ks = jax.random.split(rng, 3)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "wqkv_lstm": _normal(ks[0], (d, 3, n_heads, head_dim), std),
+        "w_gates": _normal(ks[1], (d, 2, n_heads), std),
+        "w_lstm_out": _normal(ks[2], (n_heads, head_dim, d),
+                              1.0 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def init_mlstm_cache(batch: int, n_heads: int, head_dim: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(params, x: Array):
+    xc = x.astype(COMPUTE_DTYPE)
+    qkv = jnp.einsum("bsd,dthk->tbshk", xc, params["wqkv_lstm"].astype(COMPUTE_DTYPE))
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    gates = jnp.einsum("bsd,dgh->gbsh", xc.astype(jnp.float32), params["w_gates"])
+    i_raw, f_raw = gates[0], gates[1]             # (b, s, H)
+    log_f = -jax.nn.softplus(-f_raw)              # log sigmoid
+    log_i = i_raw                                 # exponential input gate
+    dh = q.shape[-1]
+    q = q / math.sqrt(dh)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_chunkwise(params, x: Array, cache: Optional[dict] = None,
+                    chunk: int = 128):
+    """Chunkwise-parallel mLSTM. x: (b, s, d). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, x)
+    H, dh = q.shape[2], q.shape[3]
+    chunk = min(chunk, s)
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:  # identity-pad: f=1, i=0 so padded steps do not move the state
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, z4) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+
+    def resh(t):  # (b, s, H, ...) -> (nc, b, H, chunk, ...)
+        t = t.reshape(b, nc, chunk, *t.shape[2:])
+        return jnp.moveaxis(jnp.moveaxis(t, 1, 0), 3, 2)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)        # (nc, b, H, L, dh)
+    lic = jnp.moveaxis(log_i.reshape(b, nc, chunk, H), (1, 3), (0, 2))  # (nc,b,H,L)
+    lfc = jnp.moveaxis(log_f.reshape(b, nc, chunk, H), (1, 3), (0, 2))
+
+    if cache is None:
+        cache = init_mlstm_cache(b, H, dh)
+
+    def body(carry, inp):
+        C, n, m = carry                            # (b,H,dh,dh), (b,H,dh), (b,H)
+        qi, ki, vi, li, lf = inp
+        qi32, ki32, vi32 = (t.astype(jnp.float32) for t in (qi, ki, vi))
+        bsum = jnp.cumsum(lf, axis=-1)             # (b,H,L) inclusive cumsum
+        # per-position stabilizer: m_t = max(m_prev + bsum_t, max_{s<=t}(bsum_t - bsum_s + li_s))
+        g = li - bsum                              # (b,H,L)
+        gmax = jax.lax.cummax(g, axis=g.ndim - 1)
+        m_t = jnp.maximum(m[..., None] + bsum, bsum + gmax)  # (b,H,L)
+        # intra-chunk decay matrix D[t,s] = exp(bsum_t - bsum_s + li_s - m_t)
+        Dlog = bsum[..., :, None] - bsum[..., None, :] + li[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dlog = jnp.where(mask, Dlog - m_t[..., :, None], -1e30)
+        D = jnp.exp(Dlog)                          # (b,H,L,L)
+        scores = jnp.einsum("bhld,bhmd->bhlm", qi32, ki32) * D
+        num_intra = jnp.einsum("bhlm,bhmd->bhld", scores, vi32)
+        den_intra = jnp.sum(scores, axis=-1)                    # (b,H,L)
+        # inter-chunk: scale exp(m_prev + bsum_t - m_t)
+        w_inter = jnp.exp(m[..., None] + bsum - m_t)            # (b,H,L)
+        num_inter = jnp.einsum("bhld,bhdk->bhlk", qi32, C) * w_inter[..., None]
+        den_inter = jnp.einsum("bhld,bhd->bhl", qi32, n) * w_inter
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        m_L = m_t[..., -1]
+        wk = jnp.exp(bsum[..., -1:] - bsum + li - m_L[..., None])  # (b,H,L)
+        C_new = (jnp.exp(m + bsum[..., -1] - m_L)[..., None, None] * C
+                 + jnp.einsum("bhl,bhld,bhlk->bhdk", wk, ki32, vi32))
+        n_new = (jnp.exp(m + bsum[..., -1] - m_L)[..., None] * n
+                 + jnp.einsum("bhl,bhld->bhd", wk, ki32))
+        return (C_new, n_new, m_L), h
+
+    (C, n, m), hs = jax.lax.scan(
+        body, (cache["C"], cache["n"], cache["m"]), (qc, kc, vc, lic, lfc))
+    # hs: (nc, b, H, L, dh) -> (b, s, H, dh)
+    h = jnp.moveaxis(hs, 0, 1).transpose(0, 2, 1, 3, 4).reshape(b, H, s, dh)
+    h = jnp.moveaxis(h, 1, 2)
+    if s != s_orig:
+        h = h[:, :s_orig]
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(COMPUTE_DTYPE),
+                     params["w_lstm_out"].astype(COMPUTE_DTYPE))
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(params, x: Array, cache: dict):
+    """Single-step recurrent mLSTM. x: (b, 1, d)."""
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, x)
+    q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (b,H,dh)
+    li, lf = log_i[:, 0], log_f[:, 0]                               # (b,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    wf = jnp.exp(lf + m - m_new)[..., None]
+    wi = jnp.exp(li - m_new)[..., None]
+    C_new = wf[..., None] * C + jnp.einsum("bhd,bhk->bhdk", wi * k1, v1)
+    n_new = wf * n + wi * k1
+    num = jnp.einsum("bhd,bhdk->bhk", q1, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q1, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    out = jnp.einsum("bhk,hkd->bd", h.astype(COMPUTE_DTYPE),
+                     params["w_lstm_out"].astype(COMPUTE_DTYPE))
+    return out[:, None, :], {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence -> sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, d: int, n_heads: int, head_dim: int):
+    ks = jax.random.split(rng, 3)
+    std = 1.0 / math.sqrt(d)
+    stdh = 1.0 / math.sqrt(head_dim)
+    return {
+        # input projections for z, i, f, o (4 gates), per head
+        "w_slstm_in": _normal(ks[0], (d, 4, n_heads, head_dim), std),
+        # recurrent (hidden-to-hidden) per head, block-diagonal
+        "r_slstm": _normal(ks[1], (4, n_heads, head_dim, head_dim), stdh),
+        "w_lstm_out": _normal(ks[2], (n_heads, head_dim, d),
+                              1.0 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def init_slstm_cache(batch: int, n_heads: int, head_dim: int):
+    z = jnp.zeros((batch, n_heads, head_dim), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, n_heads, head_dim), -1e30)}
+
+
+def slstm_block(params, x: Array, cache: Optional[dict] = None):
+    """Sequential sLSTM. x: (b, s, d) -> (b, s, d), cache."""
+    b, s, d = x.shape
+    H, dh = params["w_slstm_in"].shape[2], params["w_slstm_in"].shape[3]
+    proj = jnp.einsum("bsd,dghk->bsghk", x.astype(jnp.float32),
+                      params["w_slstm_in"])            # (b,s,4,H,dh)
+    if cache is None:
+        cache = init_slstm_cache(b, H, dh)
+
+    R = params["r_slstm"]                              # (4,H,dh,dh)
+
+    def step(carry, pr):
+        c, n, h, m = carry                             # (b,H,dh)
+        rec = jnp.einsum("bhk,ghkj->bghj", h, R)       # (b,4,H,dh)
+        zr, ir, fr, orr = [pr[:, g] + rec[:, g] for g in range(4)]
+        z = jnp.tanh(zr)
+        o = jax.nn.sigmoid(orr)
+        log_f = -jax.nn.softplus(-fr)
+        m_new = jnp.maximum(log_f + m, ir)
+        i = jnp.exp(ir - m_new)
+        f = jnp.exp(log_f + m - m_new)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    prs = jnp.moveaxis(proj, 1, 0)                     # (s,b,4,H,dh)
+    # unroll: amortises per-step gradient all-reduces of the recurrent
+    # weights under SPMD (XLA merges collectives within the unrolled body)
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (cache["c"], cache["n"], cache["h"], cache["m"]), prs,
+        unroll=8 if s >= 8 else 1)
+    hs = jnp.moveaxis(hs, 0, 1)                        # (b,s,H,dh)
+    out = jnp.einsum("bshk,hkd->bsd", hs.astype(COMPUTE_DTYPE),
+                     params["w_lstm_out"].astype(COMPUTE_DTYPE))
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode(params, x: Array, cache: dict):
+    return slstm_block(params, x, cache)

@@ -1,0 +1,189 @@
+"""Batched FCVI serving engine (§4.3 optimizations, production shape).
+
+Implements the paper's serving-side optimizations on top of FCVIIndex:
+  * request batching (group queries, amortise index traversal),
+  * filter-aware result cache (common filter combinations hit the cache),
+  * adaptive k' with two-stage escalation (early-termination dual: retrieve
+    with a small k', escalate only queries whose top-k margin is ambiguous),
+  * delta buffer for inserts + background compaction (updates without
+    rebuilding the main index per insert),
+  * multi-probe execution for range/disjunctive predicates.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fcvi
+from repro.core.baselines import BoxPredicate
+from repro.core.fcvi import FCVIConfig, FCVIIndex
+from repro.index import flat as flat_mod
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    k: int = 10
+    batch_size: int = 64
+    cache_entries: int = 4096
+    cache_round: float = 0.05      # filter-key quantization for cache hits
+    escalate_margin: float = 0.02  # top-k score margin triggering stage 2
+    kprime_escalation: int = 4     # stage-2 k' multiplier
+    compact_threshold: int = 2048  # delta rows triggering compaction
+    multi_probe_r: int = 4
+
+
+@dataclasses.dataclass
+class EngineStats:
+    queries: int = 0
+    cache_hits: int = 0
+    escalations: int = 0
+    inserts: int = 0
+    compactions: int = 0
+    total_time_s: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.total_time_s if self.total_time_s else 0.0
+
+
+class FCVIEngine:
+    def __init__(self, index: FCVIIndex, config: EngineConfig = EngineConfig()):
+        self.index = index
+        self.cfg = config
+        self.stats = EngineStats()
+        self._cache: "collections.OrderedDict" = collections.OrderedDict()
+        self._delta_v: list = []
+        self._delta_f: list = []
+
+    # -- cache ------------------------------------------------------------
+    def _cache_key(self, q: np.ndarray, f: np.ndarray) -> bytes:
+        r = self.cfg.cache_round
+        qq = np.round(q / r).astype(np.int32)
+        ff = np.round(f / r).astype(np.int32)
+        return qq.tobytes() + b"#" + ff.tobytes()
+
+    def _cache_get(self, key: bytes):
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        return None
+
+    def _cache_put(self, key: bytes, value):
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cfg.cache_entries:
+            self._cache.popitem(last=False)
+
+    # -- search -----------------------------------------------------------
+    def search(self, queries: np.ndarray, filters: np.ndarray):
+        """queries: (n, d); filters: (n, m). Returns (scores, ids) (n, k)."""
+        t0 = time.perf_counter()
+        n = queries.shape[0]
+        k = self.cfg.k
+        out_scores = np.zeros((n, k), np.float32)
+        out_ids = np.zeros((n, k), np.int64)
+
+        todo = []
+        for i in range(n):
+            key = self._cache_key(queries[i], filters[i])
+            hit = self._cache_get(key)
+            if hit is not None:
+                out_scores[i], out_ids[i] = hit
+                self.stats.cache_hits += 1
+            else:
+                todo.append(i)
+
+        bs = self.cfg.batch_size
+        for s in range(0, len(todo), bs):
+            idxs = todo[s:s + bs]
+            pad = bs - len(idxs)
+            q = np.concatenate([queries[idxs],
+                                np.zeros((pad, queries.shape[1]), np.float32)])
+            f = np.concatenate([filters[idxs],
+                                np.zeros((pad, filters.shape[1]), np.float32)])
+            scores, ids = self._staged_query(jnp.asarray(q), jnp.asarray(f), k)
+            scores, ids = np.asarray(scores), np.asarray(ids)
+            for j, i in enumerate(idxs):
+                sc, di = self._merge_delta(queries[i], filters[i], scores[j], ids[j], k)
+                out_scores[i], out_ids[i] = sc, di
+                self._cache_put(self._cache_key(queries[i], filters[i]), (sc, di))
+
+        self.stats.queries += n
+        self.stats.total_time_s += time.perf_counter() - t0
+        return out_scores, out_ids
+
+    def _staged_query(self, q, f, k):
+        scores, ids = fcvi.query(self.index, q, f, k)
+        margin = scores[:, 0] - scores[:, -1]
+        need = np.asarray(margin < self.cfg.escalate_margin)
+        if need.any():
+            self.stats.escalations += int(need.sum())
+            from repro.core import theory
+            cfg = self.index.config
+            kp2 = theory.k_prime(k, cfg.lam, cfg.resolved_alpha(),
+                                 self.index.size,
+                                 cfg.c * self.cfg.kprime_escalation)
+            s2, i2 = fcvi.query(self.index, q, f, k, k_prime=kp2)
+            sel = jnp.asarray(need)[:, None]
+            scores = jnp.where(sel, s2, scores)
+            ids = jnp.where(sel, i2, ids)
+        return scores, ids
+
+    def search_predicate(self, queries: np.ndarray, pred: BoxPredicate):
+        """Range/disjunctive predicate -> multi-probe (§4.3)."""
+        probes = np.asarray(pred.probes(self.cfg.multi_probe_r))  # (r, m)
+        n = queries.shape[0]
+        fp = jnp.broadcast_to(jnp.asarray(probes)[None],
+                              (n, *probes.shape))
+        return fcvi.multi_probe_query(self.index, jnp.asarray(queries), fp,
+                                      self.cfg.k)
+
+    # -- updates ----------------------------------------------------------
+    def insert(self, vectors: np.ndarray, filters: np.ndarray):
+        self._delta_v.append(np.asarray(vectors, np.float32))
+        self._delta_f.append(np.asarray(filters, np.float32))
+        self.stats.inserts += len(vectors)
+        self._cache.clear()  # results may change
+        if sum(len(v) for v in self._delta_v) >= self.cfg.compact_threshold:
+            self.compact()
+
+    def delta_size(self) -> int:
+        return sum(len(v) for v in self._delta_v)
+
+    def compact(self):
+        if not self._delta_v:
+            return
+        v = np.concatenate(self._delta_v)
+        f = np.concatenate(self._delta_f)
+        self.index = fcvi.extend(self.index, jnp.asarray(v), jnp.asarray(f))
+        self._delta_v, self._delta_f = [], []
+        self.stats.compactions += 1
+
+    def _merge_delta(self, q, f, scores, ids, k):
+        """Exact search over the (small) delta buffer, merged into results."""
+        if not self._delta_v:
+            return scores, ids
+        dv = np.concatenate(self._delta_v)
+        df = np.concatenate(self._delta_f)
+        tfm = self.index.transform
+        qn = np.asarray(tfm.vec_norm.apply(jnp.asarray(q[None])))[0]
+        fqn = np.asarray(tfm.filt_norm.apply(jnp.asarray(f[None])))[0]
+        dvn = np.asarray(tfm.vec_norm.apply(jnp.asarray(dv)))
+        dfn = np.asarray(tfm.filt_norm.apply(jnp.asarray(df)))
+
+        def cos(a, b):
+            return (a @ b) / (np.linalg.norm(a, axis=-1) * np.linalg.norm(b) + 1e-8)
+
+        lam = self.index.config.lam
+        s = lam * cos(dvn, qn) + (1 - lam) * cos(dfn, fqn)
+        base = self.index.size
+        all_s = np.concatenate([scores, s])
+        all_i = np.concatenate([ids, base + np.arange(len(s))])
+        top = np.argsort(-all_s)[:k]
+        return all_s[top].astype(np.float32), all_i[top]

@@ -1,0 +1,95 @@
+"""Pre/post/hybrid baselines vs the binary-predicate oracle (paper §2.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BoxPredicate, post_filter_search, pre_filter_search,
+                        build_hybrid, hybrid_search, ground_truth_filtered,
+                        recall_at_k)
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.index import flat as flat_mod
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = CorpusSpec(n=4000, d=48, n_categories=4, n_numeric=2, seed=3)
+    corpus = make_corpus(spec)
+    q, _ = sample_queries(corpus, 8, seed=4)
+    v = jnp.asarray(corpus.vectors)
+    f = jnp.asarray(corpus.filters)
+    m = spec.m
+    # moderate-selectivity numeric range predicate on the last attribute
+    lo = np.full(m, -np.inf, np.float32)
+    hi = np.full(m, np.inf, np.float32)
+    lo[-1], hi[-1] = 0.2, 0.6
+    pred = BoxPredicate(low=jnp.asarray(lo), high=jnp.asarray(hi))
+    sel = float(np.asarray(pred.mask(f)).mean())
+    assert 0.1 < sel < 0.7, f"bad selectivity {sel}"
+    return corpus, v, f, jnp.asarray(q), pred
+
+
+def test_pre_filter_is_exact(setup):
+    corpus, v, f, q, pred = setup
+    idx = flat_mod.build(v)
+    _, ids = pre_filter_search(idx, f, q, pred, 10)
+    _, ref = ground_truth_filtered(v, f, q, pred, 10)
+    assert float(recall_at_k(ids, ref)) > 0.999
+
+
+def test_post_filter_recall_with_oversampling(setup):
+    corpus, v, f, q, pred = setup
+    idx = flat_mod.build(v)
+    _, ids = post_filter_search(idx, f, q, pred, 10, oversample=40)
+    _, ref = ground_truth_filtered(v, f, q, pred, 10)
+    assert float(recall_at_k(ids, ref)) > 0.9
+
+
+def test_post_filter_degrades_with_low_oversampling(setup):
+    """The paper's core criticism of post-filtering: selective predicates
+    starve the candidate set."""
+    corpus, v, f, q, pred = setup
+    idx = flat_mod.build(v)
+    _, ids_small = post_filter_search(idx, f, q, pred, 10, oversample=2)
+    _, ids_big = post_filter_search(idx, f, q, pred, 10, oversample=40)
+    _, ref = ground_truth_filtered(v, f, q, pred, 10)
+    assert recall_at_k(ids_small, ref) <= recall_at_k(ids_big, ref)
+
+
+def test_post_filter_results_satisfy_predicate(setup):
+    corpus, v, f, q, pred = setup
+    idx = flat_mod.build(v)
+    vals, ids = post_filter_search(idx, f, q, pred, 10, oversample=40)
+    got = np.asarray(pred.mask(f[ids]))
+    valid = np.asarray(vals) > -np.inf
+    assert got[valid].all()
+
+
+def test_hybrid_routes_and_recalls(setup):
+    corpus, v, f, q, pred = setup
+    h = build_hybrid(v, f, key_dim=f.shape[1] - 1, n_segments=16)
+    _, ids = hybrid_search(h, q, pred, 10)
+    _, ref = ground_truth_filtered(v, f, q, pred, 10)
+    assert float(recall_at_k(ids, ref)) > 0.85
+
+
+def test_hybrid_pre_path_on_narrow_range(setup):
+    corpus, v, f, q, _ = setup
+    m = f.shape[1]
+    lo = np.full(m, -np.inf, np.float32)
+    hi = np.full(m, np.inf, np.float32)
+    lo[-1], hi[-1] = 0.30, 0.34   # very narrow -> segment pre-filter path
+    pred = BoxPredicate(low=jnp.asarray(lo), high=jnp.asarray(hi))
+    h = build_hybrid(v, f, key_dim=m - 1, n_segments=16)
+    vals, ids = hybrid_search(h, q, pred, 10, pre_threshold=0.25)
+    _, ref = ground_truth_filtered(v, f, q, pred, 10)
+    assert float(recall_at_k(ids, ref)) > 0.95
+
+
+def test_predicate_probes_span_box():
+    lo = jnp.asarray([0.0, -1.0])
+    hi = jnp.asarray([1.0, 1.0])
+    pred = BoxPredicate(low=lo, high=hi)
+    pr = np.asarray(pred.probes(5))
+    assert pr.shape == (5, 2)
+    np.testing.assert_allclose(pr[0], [0.0, -1.0])
+    np.testing.assert_allclose(pr[-1], [1.0, 1.0])

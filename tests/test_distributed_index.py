@@ -1,0 +1,62 @@
+"""Distributed-index invariants: top-k merge algebra, filter-centric layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import kmeans
+from repro.index.distributed import cluster_sharded_layout
+from repro.index.flat import merge_topk
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 32), st.integers(1, 32),
+       st.integers(0, 2**31 - 1))
+def test_merge_topk_equals_global_topk(k, na, nb, seed):
+    """merge(topk(A), topk(B)) == topk(A ∪ B) — the tree-merge soundness
+    property the multi-pod search relies on."""
+    r = np.random.default_rng(seed)
+    k = min(k, na + nb)
+    va = jnp.asarray(r.normal(size=(3, na)).astype(np.float32))
+    vb = jnp.asarray(r.normal(size=(3, nb)).astype(np.float32))
+    ia = jnp.broadcast_to(jnp.arange(na), (3, na))
+    ib = jnp.broadcast_to(jnp.arange(nb) + na, (3, nb))
+    mv, mi = merge_topk(va, ia, vb, ib, k)
+    allv = jnp.concatenate([va, vb], axis=1)
+    ref_v, ref_pos = jax.lax.top_k(allv, k)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(ref_v), rtol=1e-6)
+
+
+def test_merge_topk_associativity():
+    r = np.random.default_rng(1)
+    parts = [jnp.asarray(r.normal(size=(2, 8)).astype(np.float32))
+             for _ in range(3)]
+    ids = [jnp.broadcast_to(jnp.arange(8) + 8 * i, (2, 8)) for i in range(3)]
+    k = 5
+    ab_v, ab_i = merge_topk(parts[0], ids[0], parts[1], ids[1], k)
+    left_v, left_i = merge_topk(ab_v, ab_i, parts[2], ids[2], k)
+    bc_v, bc_i = merge_topk(parts[1], ids[1], parts[2], ids[2], k)
+    right_v, right_i = merge_topk(parts[0], ids[0], bc_v, bc_i, k)
+    np.testing.assert_allclose(np.asarray(left_v), np.asarray(right_v),
+                               rtol=1e-6)
+
+
+def test_cluster_sharded_layout_is_permutation():
+    r = np.random.default_rng(2)
+    v = jnp.asarray(r.normal(size=(1024, 16)).astype(np.float32))
+    centers, _ = kmeans(jax.random.PRNGKey(0), v, 8, iters=5)
+    perm, shard_of_cluster = cluster_sharded_layout(v, centers, n_shards=4)
+    p = np.asarray(perm)
+    assert sorted(p.tolist()) == list(range(1024))       # true permutation
+    assert shard_of_cluster.shape == (8,)
+    assert (np.asarray(shard_of_cluster) < 4).all()
+
+
+def test_cluster_layout_balances_shards():
+    r = np.random.default_rng(3)
+    v = jnp.asarray(r.normal(size=(4096, 8)).astype(np.float32))
+    centers, _ = kmeans(jax.random.PRNGKey(1), v, 16, iters=5)
+    perm, _ = cluster_sharded_layout(v, centers, n_shards=8)
+    # contiguous equal shards by construction
+    assert perm.shape[0] == 4096

@@ -1,0 +1,107 @@
+"""Serving engine behaviour + data pipeline determinism + shift protocols."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build, BoxPredicate
+from repro.data.synthetic import (CorpusSpec, make_corpus, sample_queries,
+                                  shift_filter_distribution,
+                                  shift_vector_distribution,
+                                  shifted_query_pattern)
+from repro.data.tokens import MarkovTokens, TokenSpec
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    spec = CorpusSpec(n=3000, d=32, n_categories=6, n_numeric=2, seed=5)
+    corpus = make_corpus(spec)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0))
+    return corpus, FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                                compact_threshold=64))
+
+
+def test_engine_search_and_cache(engine):
+    corpus, eng = engine
+    q, fq = sample_queries(corpus, 8, seed=6)
+    s1, i1 = eng.search(q, fq)
+    assert s1.shape == (8, 5)
+    hits_before = eng.stats.cache_hits
+    s2, i2 = eng.search(q, fq)      # identical queries -> cache
+    assert eng.stats.cache_hits == hits_before + 8
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_engine_insert_delta_and_compaction(engine):
+    corpus, eng = engine
+    spec = corpus.spec
+    r = np.random.default_rng(11)
+    # insert a batch small enough to stay in the delta buffer
+    nv = r.normal(size=(8, spec.d)).astype(np.float32)
+    nf = corpus.filters[:8].copy()
+    base_size = eng.index.size
+    eng.insert(nv, nf)
+    assert eng.delta_size() == 8
+    # a query identical to an inserted vector must retrieve it from the delta
+    s, ids = eng.search(nv[:2], nf[:2])
+    assert (ids >= base_size).any()
+    # exceeding the threshold compacts into the main index
+    big_v = r.normal(size=(64, spec.d)).astype(np.float32)
+    eng.insert(big_v, corpus.filters[:64].copy())
+    assert eng.delta_size() == 0
+    assert eng.index.size == base_size + 8 + 64
+    assert eng.stats.compactions >= 1
+
+
+def test_engine_predicate_multiprobe(engine):
+    corpus, eng = engine
+    spec = corpus.spec
+    q, _ = sample_queries(corpus, 4, seed=7)
+    lo = np.full(spec.m, -np.inf, np.float32)
+    hi = np.full(spec.m, np.inf, np.float32)
+    lo[-1], hi[-1] = 0.2, 0.8
+    pred = BoxPredicate(low=jnp.asarray(lo), high=jnp.asarray(hi))
+    scores, ids = eng.search_predicate(q, pred)
+    assert ids.shape == (4, 5)
+
+
+def test_markov_tokens_deterministic():
+    spec = TokenSpec(vocab_size=64, batch=4, seq_len=32, seed=3)
+    a = next(iter(MarkovTokens(spec)))["tokens"]
+    b = next(iter(MarkovTokens(spec)))["tokens"]
+    np.testing.assert_array_equal(a, b)
+    # different hosts draw different data
+    spec2 = TokenSpec(vocab_size=64, batch=4, seq_len=32, seed=3, host_id=1)
+    c = next(iter(MarkovTokens(spec2)))["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_markov_tokens_learnable_structure():
+    """Transitions are concentrated: next-token entropy << uniform."""
+    spec = TokenSpec(vocab_size=64, batch=64, seq_len=64, seed=0, branching=4)
+    toks = next(iter(MarkovTokens(spec)))["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), set()).add(int(b))
+    avg_succ = np.mean([len(v) for v in pairs.values()])
+    assert avg_succ <= 4.5  # branching-limited, not uniform-64
+
+
+def test_shift_protocols_change_distributions():
+    spec = CorpusSpec(n=2000, d=16, n_categories=6, n_numeric=2, seed=9)
+    corpus = make_corpus(spec)
+    shifted_f = shift_filter_distribution(corpus)
+    # category histogram must actually change
+    h0 = np.bincount(corpus.cat_labels, minlength=6)
+    h1 = np.bincount(shifted_f.cat_labels, minlength=6)
+    assert (h0 != h1).any()
+    assert not np.array_equal(shifted_f.filters, corpus.filters)
+
+    shifted_v = shift_vector_distribution(corpus, frac_new=0.25)
+    assert shifted_v.vectors.shape == corpus.vectors.shape
+    assert (shifted_v.vec_labels >= spec.n_vec_clusters).sum() > 0
+
+    q, fq = shifted_query_pattern(corpus, 32)
+    assert q.shape == (32, spec.d) and fq.shape == (32, spec.m)

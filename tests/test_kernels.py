@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(r, shape, dtype):
+    x = r.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("n,d,m", [(256, 64, 4), (512, 128, 8), (128, 96, 3),
+                                   (384, 256, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_transform(n, d, m, dtype):
+    r = np.random.default_rng(n + m)
+    v = _rand(r, (n, d), dtype)
+    f = _rand(r, (n, m), dtype)
+    P = ref.partition_matrix(d, m)
+    mv, sv = jnp.full((d,), 0.2), jnp.full((d,), 1.3)
+    mf, sf = jnp.full((m,), -0.1), jnp.full((m,), 0.8)
+    got = ops.fused_transform(v, f, P, 2.0, mv, sv, mf, sf, block_rows=128)
+    want = ref.ref_fused_transform(v, f, P, 2.0, mv, sv, mf, sf)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,q,k", [(512, 64, 64, 8), (256, 128, 128, 16),
+                                     (1024, 32, 64, 32)])
+def test_score_topk(n, d, q, k):
+    r = np.random.default_rng(n + k)
+    corpus = _rand(r, (n, d), jnp.float32)
+    queries = _rand(r, (q, d), jnp.float32)
+    sq = jnp.sum(corpus * corpus, -1)
+    v1, i1 = ops.score_topk(corpus, sq, queries, k, block_rows=128, block_q=64)
+    v2, i2 = ref.ref_score_topk(corpus, sq, queries, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).mean() > 0.999
+
+
+@pytest.mark.parametrize("b,kp,d,m", [(8, 32, 64, 4), (16, 64, 128, 8)])
+def test_rescore(b, kp, d, m):
+    r = np.random.default_rng(b)
+    cv = _rand(r, (b, kp, d), jnp.float32)
+    cf = _rand(r, (b, kp, m), jnp.float32)
+    qn = _rand(r, (b, d), jnp.float32)
+    fqn = _rand(r, (b, m), jnp.float32)
+    got = ops.rescore(cv, cf, qn, fqn, 0.35, block_b=4)
+    want = ref.ref_rescore(cv, cf, qn, fqn, 0.35)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("nlist,maxl,d,nprobe,k",
+                         [(8, 64, 64, 3, 8), (16, 128, 32, 5, 16)])
+def test_ivf_score_topk(nlist, maxl, d, nprobe, k):
+    r = np.random.default_rng(nlist)
+    grouped = _rand(r, (nlist, maxl, d), jnp.float32)
+    gsq = jnp.sum(grouped * grouped, -1)
+    valid = jnp.asarray((r.random((nlist, maxl)) > 0.15).astype(np.float32))
+    probes = jnp.asarray(r.choice(nlist, nprobe, replace=False).astype(np.int32))
+    qv = _rand(r, (d,), jnp.float32)
+    v1, i1 = ops.ivf_score_topk(grouped, gsq, valid, probes, qv, k)
+    v2, i2 = ref.ref_ivf_score_topk(grouped, gsq, valid > 0.5, probes, qv, k)
+    # kernel drops the ||q||^2 constant: compare shifted
+    q2 = float(jnp.sum(qv * qv))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2) + q2,
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("n,M,ksub", [(512, 8, 64), (1024, 16, 256),
+                                      (256, 4, 16)])
+def test_pq_score(n, M, ksub):
+    r = np.random.default_rng(M)
+    codes = jnp.asarray(r.integers(0, ksub, (n, M)).astype(np.int32))
+    lut = jnp.asarray(r.random((M, ksub)).astype(np.float32))
+    got = ops.pq_score(codes, lut, block_rows=128)
+    want = ref.ref_pq_score(codes, lut)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_ops_fallback_matches_pallas():
+    """use_pallas=False (oracle path) and kernels must agree bit-for-bit-ish."""
+    r = np.random.default_rng(9)
+    corpus = _rand(r, (256, 64), jnp.float32)
+    q = _rand(r, (32, 64), jnp.float32)
+    sq = jnp.sum(corpus * corpus, -1)
+    v1, i1 = ops.score_topk(corpus, sq, q, 8)
+    v2, i2 = ops.score_topk(corpus, sq, q, 8, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()

@@ -1,0 +1,115 @@
+"""Per-arch smoke tests: reduced config, one forward/train step, serving
+consistency. (Deliverable f: REDUCED same-family configs on CPU.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced
+from repro.models import model as M
+
+ARCHS = list_archs()
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)}
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(RNG, (b, 16, cfg.d_model))
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(RNG, (b, cfg.n_prefix, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(RNG, cfg)
+    batch = _batch(cfg)
+    logits = M.forward(params, cfg, batch)
+    prefix = cfg.n_prefix if cfg.frontend == "vision_stub" else 0
+    assert logits.shape == (2, 32 + prefix, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(RNG, cfg)
+    batch = _batch(cfg)
+    loss, metrics = M.lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: M.lm_loss(p, cfg, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))) for g in flat)
+    gnorm = float(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in flat) ** 0.5)
+    assert 0 < gnorm < 1e3
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "recurrentgemma-2b",
+                                  "xlstm-125m", "whisper-large-v3",
+                                  "dbrx-132b"])
+def test_serving_consistency(arch):
+    """prefill + decode must reproduce teacher-forced forward logits."""
+    cfg = reduced(get_config(arch))
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    params = M.init_params(RNG, cfg)
+    b, s = 2, 24
+    tokens = jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)
+    batch = _batch(cfg, b, s)
+    batch["tokens"] = tokens
+    full = M.forward(params, cfg, batch)
+    prefix = cfg.n_prefix if cfg.frontend == "vision_stub" else 0
+    sp = s - 4
+    pb = dict(batch)
+    pb["tokens"] = tokens[:, :sp]
+    logits_p, cache = M.prefill(params, cfg, pb, max_len=64)
+    errs = [float(jnp.max(jnp.abs(logits_p[:, 0] - full[:, prefix + sp - 1])))]
+    for t in range(sp, s - 1):
+        lg, cache = M.decode_step(params, cfg, tokens[:, t:t + 1], cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, prefix + t]))))
+    assert max(errs) < 0.15, f"decode drift {max(errs)}"
+
+
+def test_pattern_cycling():
+    cfg = get_config("gemma3-1b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 26
+    assert kinds[:6] == ["local"] * 5 + ["attn"]
+    assert cfg.rest_kinds == ("local", "local")
+    cfg2 = get_config("recurrentgemma-2b")
+    assert cfg2.layer_kinds()[:3] == ["rec", "rec", "local"]
+
+
+def test_vocab_padding():
+    cfg = get_config("whisper-large-v3")
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    cfg2 = get_config("mistral-nemo-12b")
+    assert cfg2.padded_vocab == cfg2.vocab_size  # already divisible
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) param counts are in the right ballpark — catches
+    config transcription errors without allocating (eval_shape only)."""
+    import functools
+    expected = {
+        "gemma3-1b": (0.7e9, 1.6e9),
+        "recurrentgemma-2b": (2.0e9, 3.3e9),
+        "starcoder2-7b": (6.0e9, 8.5e9),
+        "mistral-nemo-12b": (11e9, 14e9),
+        "gemma2-27b": (24e9, 30e9),
+        "dbrx-132b": (110e9, 140e9),
+        "xlstm-125m": (0.05e9, 0.2e9),  # d_ff=0 per assignment: no MLP stack
+        "granite-moe-3b-a800m": (2.5e9, 4.0e9),
+        "internvl2-26b": (18e9, 26e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        sds = jax.eval_shape(functools.partial(M.init_params, cfg=cfg), RNG)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(sds))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of range"

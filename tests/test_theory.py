@@ -1,0 +1,76 @@
+"""Thm 5.3 (cluster separation) and Thm 5.4 (k' sizing) properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.transform import psi_partition
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_thm53_alpha_star_separates(seed):
+    """alpha >= alpha* guarantees complete cluster separation whenever the
+    feasibility condition (d/m) delta_f > 2 D_v holds."""
+    r = np.random.default_rng(seed)
+    d, m, k = 32, 4, 3
+    centers = 6.0 * r.normal(size=(k, m)).astype(np.float32)
+    labels = r.integers(0, k, 60)
+    filters = centers[labels]
+    vectors = 0.3 * r.normal(size=(60, d)).astype(np.float32)
+
+    # D_v: max intra-cluster vector distance; delta_f: min inter-filter dist
+    d_v = 0.0
+    for c in range(k):
+        idx = np.nonzero(labels == c)[0]
+        if len(idx) > 1:
+            diff = vectors[idx][:, None] - vectors[idx][None]
+            d_v = max(d_v, float(np.sqrt((diff ** 2).sum(-1)).max()))
+    cdiff = centers[:, None] - centers[None]
+    cd = np.sqrt((cdiff ** 2).sum(-1))
+    delta_f = float(cd[cd > 0].min())
+
+    a_star = float(theory.alpha_star(d_v, delta_f, d, m))
+    if not np.isfinite(a_star):
+        return  # infeasible configuration: theorem makes no claim
+    alpha = max(a_star * 1.01, 1.0)
+    t = np.asarray(psi_partition(jnp.asarray(vectors), jnp.asarray(filters), alpha))
+
+    intra_max, inter_min = 0.0, np.inf
+    dist = np.sqrt(((t[:, None] - t[None]) ** 2).sum(-1))
+    same = labels[:, None] == labels[None]
+    np.fill_diagonal(same, True)
+    intra_max = dist[same].max()
+    if (~same).any():
+        inter_min = dist[~same].min()
+    assert inter_min > intra_max
+
+
+def test_kprime_monotonic_in_lambda_and_alpha():
+    n = 100000
+    # k' shrinks as lambda grows (less filter re-ranking headroom needed)
+    ks = [theory.k_prime(10, lam, 1.0, n) for lam in (0.1, 0.3, 0.5, 0.9)]
+    assert ks == sorted(ks, reverse=True)
+    # k' shrinks quadratically as alpha grows (until the k floor binds)
+    ka = [theory.k_prime(100, 0.5, a, n) for a in (1.0, 2.0, 4.0)]
+    assert ka == sorted(ka, reverse=True)
+    assert ka[0] == 4 * ka[1]          # exact 1/alpha^2 scaling
+    assert ka[2] == 100                # floor at k once c*k/(lam*a^2) < k
+
+
+def test_kprime_bounds():
+    assert theory.k_prime(10, 0.5, 1.0, 20) <= 20   # capped at N
+    assert theory.k_prime(10, 1.0, 10.0, 10**6) >= 10  # never below k
+
+
+def test_optimal_alpha_clip():
+    assert float(theory.optimal_alpha(0.9)) == 1.0       # sqrt(1/9) -> clip
+    assert float(theory.optimal_alpha(0.2)) == pytest.approx(2.0, rel=1e-3)
+
+
+def test_separation_margin_sign():
+    # with huge alpha the margin must be positive for separated filters
+    margin = theory.separation_margin(d_v=1.0, delta_f=2.0, d=32, m=4,
+                                      alpha=10.0)
+    assert float(margin) > 0

@@ -1,0 +1,154 @@
+"""Training loop, checkpointing (elastic restore), fault-tolerance policies."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.checkpoint import ckpt
+from repro.data.tokens import MarkovTokens, TokenSpec
+from repro.distributed import fault
+from repro.models import model as M
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt
+
+
+def test_loss_decreases_on_markov_data():
+    cfg = reduced(get_config("gemma3-1b"))
+    cfg = dataclasses.replace(cfg, n_layers=2, pattern=("local", "attn"))
+    adamw = opt.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                            weight_decay=0.0)
+    step = jax.jit(train_loop.make_train_step(cfg, adamw))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    stream = MarkovTokens(TokenSpec(vocab_size=cfg.vocab_size, batch=8,
+                                    seq_len=64, seed=0, branching=4))
+    losses = []
+    for i, batch in zip(range(40), stream):
+        params, state, m = step(params, state, {"tokens": jnp.asarray(batch["tokens"])})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, f"{losses[0]:.3f} -> {losses[-1]:.3f}"
+
+
+def test_microbatch_accumulation_matches():
+    cfg = reduced(get_config("starcoder2-7b"))
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    adamw = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step1 = jax.jit(train_loop.make_train_step(cfg, adamw, n_micro=1))
+    step2 = jax.jit(train_loop.make_train_step(cfg, adamw, n_micro=2))
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                          cfg.vocab_size)}
+    p1, _, m1 = step1(params, opt.init(params), batch)
+    p2, _, m2 = step2(params, opt.init(params), batch)
+    # same data -> nearly identical update (bf16 noise only)
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-3, f"micro-accum drift {d}"
+
+
+def test_adamw_schedule():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(opt.schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(opt.schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(opt.schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_grad_clip():
+    cfg = opt.AdamWConfig(grad_clip=1.0, lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(params)
+    _, _, m = opt.update(cfg, grads, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": [{"b": jnp.ones((2, 2), jnp.bfloat16)},
+                       {"b": jnp.zeros((2, 2), jnp.bfloat16)}]}
+    ckpt.save(str(tmp_path), 7, tree, metadata={"mesh": [4, 2]})
+    out, step, meta = ckpt.restore(str(tmp_path), tree)
+    assert step == 7 and meta["mesh"] == [4, 2]
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"x": jnp.ones((2,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"x": jnp.ones((5,))})
+
+
+def test_checkpoint_elastic_restore_resharded(tmp_path):
+    """Restore onto a different device layout (elastic restart path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 3, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out, _, _ = ckpt.restore(str(tmp_path), tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance policies
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection():
+    hb = fault.HeartbeatTracker(n_hosts=8, straggler_z=2.0,
+                                straggler_patience=3)
+    for step in range(6):
+        for h in range(8):
+            t = 1.0 if h != 3 else 3.0  # host 3 consistently 3x slower
+            hb.record(h, step, t)
+        stragglers = hb.stragglers()
+    assert stragglers == [3]
+
+
+def test_failure_detection_and_restart_plan():
+    hb = fault.HeartbeatTracker(n_hosts=4, timeout_steps=2)
+    for step in range(5):
+        for h in range(4):
+            if h == 2 and step >= 2:
+                continue  # host 2 dies at step 2
+            hb.record(h, step, 1.0)
+    dead = hb.failures(current_step=5)
+    assert dead == [2]
+    hb.mark_dead(dead)
+    # 4 hosts x 64 devices; lose one -> 192 devices, TP=16 keeps 12 data rows
+    plan = fault.plan_restart(n_alive_devices=192, model_parallel=16,
+                              old_mesh_shape=(16, 16), dropped_hosts=dead)
+    assert plan.mesh_shape == (12, 16)
+    assert plan.n_devices == 192
+    assert plan.batch_scale == pytest.approx(12 / 16)
+
+
+def test_restart_infeasible():
+    assert fault.plan_restart(8, 16, (16, 16), [0]) is None
+
+
+def test_microbatch_reassignment_covers_all():
+    plan = fault.reassign_microbatches(16, alive_hosts=[0, 1, 3])
+    assert set(plan.keys()) == set(range(16))
+    assert set(plan.values()) == {0, 1, 3}
+    loads = [list(plan.values()).count(h) for h in (0, 1, 3)]
+    assert max(loads) - min(loads) <= 1

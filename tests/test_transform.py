@@ -1,0 +1,137 @@
+"""Properties of the psi transformation (paper §4.1, Thm 5.1/5.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.transform import (Normalizer, fit_transform, psi_cluster,
+                                  psi_embedding, psi_partition,
+                                  psi_partition_inverse, tiled_filter)
+from repro.kernels.ref import partition_matrix
+
+DIMS = st.sampled_from([(8, 2), (16, 4), (32, 8), (64, 4), (12, 3)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, st.floats(1.0, 8.0), st.integers(0, 2**31 - 1))
+def test_thm51_same_filter_distance_preserved(dims, alpha, seed):
+    """Thm 5.1 case 1: identical filters -> distances exactly preserved."""
+    d, m = dims
+    r = np.random.default_rng(seed)
+    va, vb = r.normal(size=(2, d)).astype(np.float32)
+    f = r.normal(size=(m,)).astype(np.float32)
+    ta = psi_partition(jnp.asarray(va), jnp.asarray(f), alpha)
+    tb = psi_partition(jnp.asarray(vb), jnp.asarray(f), alpha)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(ta - tb)),
+        np.linalg.norm(va - vb), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, st.integers(0, 2**31 - 1))
+def test_thm51_closed_form_distance(dims, seed):
+    """The expansion in Thm 5.1's proof matches the actual distance."""
+    d, m = dims
+    r = np.random.default_rng(seed)
+    va, vb = r.normal(size=(2, d)).astype(np.float32)
+    fa, fb = r.normal(size=(2, m)).astype(np.float32)
+    alpha = 2.0
+    ta = psi_partition(jnp.asarray(va), jnp.asarray(fa), alpha)
+    tb = psi_partition(jnp.asarray(vb), jnp.asarray(fb), alpha)
+    actual = float(jnp.sum((ta - tb) ** 2))
+    closed = float(theory.transformed_sq_distance(
+        jnp.asarray(va), jnp.asarray(vb), jnp.asarray(fa), jnp.asarray(fb), alpha))
+    np.testing.assert_allclose(actual, closed, rtol=1e-4)
+
+
+def test_quadratic_filter_influence():
+    """Thm 5.1: filter-difference term grows quadratically with alpha."""
+    r = np.random.default_rng(1)
+    v = jnp.asarray(r.normal(size=(16,)).astype(np.float32))
+    fa = jnp.asarray(r.normal(size=(4,)).astype(np.float32))
+    fb = jnp.asarray(r.normal(size=(4,)).astype(np.float32))
+    dists = []
+    for alpha in (1.0, 2.0, 4.0):
+        ta = psi_partition(v, fa, alpha)
+        tb = psi_partition(v, fb, alpha)
+        dists.append(float(jnp.sum((ta - tb) ** 2)))
+    # same v: distance^2 = (d/m) a^2 ||df||^2 exactly -> ratios 4x
+    assert dists[1] / dists[0] == pytest.approx(4.0, rel=1e-4)
+    assert dists[2] / dists[1] == pytest.approx(4.0, rel=1e-4)
+
+
+def test_partition_equals_matrix_form():
+    """psi_partition == v - alpha * f @ P (the kernel's matmul form)."""
+    r = np.random.default_rng(2)
+    v = jnp.asarray(r.normal(size=(5, 24)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(5, 4)).astype(np.float32))
+    P = partition_matrix(24, 4)
+    np.testing.assert_allclose(
+        np.asarray(psi_partition(v, f, 3.0)),
+        np.asarray(v - 3.0 * f @ P), rtol=1e-5)
+
+
+def test_partition_inverse():
+    r = np.random.default_rng(3)
+    v = jnp.asarray(r.normal(size=(7, 20)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(7, 5)).astype(np.float32))
+    t = psi_partition(v, f, 2.5)
+    back = psi_partition_inverse(t, f, 2.5)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(v), atol=1e-5)
+
+
+def test_tiled_filter_identity():
+    r = np.random.default_rng(4)
+    v = jnp.asarray(r.normal(size=(3, 12)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(3, 3)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(psi_partition(v, f, 1.5)),
+        np.asarray(v - 1.5 * tiled_filter(f, 12)), rtol=1e-6)
+
+
+def test_embedding_mode_defaults_to_partition():
+    """With the default tiled-identity W, Eq. 7 reduces to Eq. 5."""
+    r = np.random.default_rng(5)
+    v = jnp.asarray(r.normal(size=(50, 16)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(50, 4)).astype(np.float32))
+    t_part = fit_transform(v, f, 2.0, "partition")
+    t_emb = fit_transform(v, f, 2.0, "embedding")
+    np.testing.assert_allclose(np.asarray(t_part.apply(v, f)),
+                               np.asarray(t_emb.apply(v, f)), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_cluster_mode_uses_centers():
+    r = np.random.default_rng(6)
+    centers = 4.0 * r.normal(size=(4, 4)).astype(np.float32)
+    labels = r.integers(0, 4, 200)
+    f = (centers[labels] + 0.01 * r.normal(size=(200, 4))).astype(np.float32)
+    v = r.normal(size=(200, 16)).astype(np.float32)
+    tfm = fit_transform(jnp.asarray(v), jnp.asarray(f), 2.0, "cluster",
+                        n_clusters=4, normalize=False)
+    # two rows with the same cluster but different f must transform with the
+    # SAME center -> their transformed difference equals raw difference
+    same = np.nonzero(labels == labels[0])[0][:2]
+    t = tfm.apply(jnp.asarray(v[same]), jnp.asarray(f[same]))
+    np.testing.assert_allclose(
+        np.asarray(t[0] - t[1]), v[same[0]] - v[same[1]], atol=1e-4)
+
+
+def test_normalizer_standardizes():
+    r = np.random.default_rng(7)
+    x = (5.0 + 3.0 * r.normal(size=(4000, 6))).astype(np.float32)
+    nrm = Normalizer.fit(jnp.asarray(x))
+    y = np.asarray(nrm.apply(jnp.asarray(x)))
+    np.testing.assert_allclose(y.mean(0), 0.0, atol=1e-3)
+    np.testing.assert_allclose(y.std(0), 1.0, atol=1e-2)
+    back = np.asarray(nrm.inverse(jnp.asarray(y)))
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+def test_partition_requires_divisibility():
+    v = jnp.zeros((2, 10))
+    f = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        psi_partition(v, f, 1.0)
