@@ -1,0 +1,186 @@
+"""End-to-end query-path benchmark: FCVIEngine.search throughput.
+
+The repo's first perf-trajectory artifact. Times the serving engine on the
+flat and IVF backends, with and without the Pallas kernels, at batch sizes
+64 and 256, against a live delta buffer (the production steady state:
+inserts pending, compaction not yet triggered). Also times a faithful
+re-implementation of the pre-batching per-query engine loop (per-query cache
+keys + per-query numpy delta merge) as the ``legacy`` baseline, so the
+speedup of the loop-free path is measured on the same host and corpus.
+
+Writes BENCH_query_path.json next to this file:
+
+  {"results": [{backend, use_pallas, batch, qps, ms_per_query}, ...],
+   "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...}
+
+Usage: PYTHONPATH=src python benchmarks/query_path.py [--n 8192] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FCVIConfig, build, fcvi
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+
+def legacy_search(engine: FCVIEngine, queries: np.ndarray,
+                  filters: np.ndarray):
+    """The pre-change engine loop: O(batch) host-side python per query."""
+    n = queries.shape[0]
+    k = engine.cfg.k
+    out_scores = np.zeros((n, k), np.float32)
+    out_ids = np.zeros((n, k), np.int64)
+
+    def cache_key(q, f):
+        r = engine.cfg.cache_round
+        return (np.round(q / r).astype(np.int32).tobytes() + b"#"
+                + np.round(f / r).astype(np.int32).tobytes())
+
+    def merge_delta(q, f, scores, ids):
+        if not engine._delta_v:
+            return scores, ids
+        dv = np.concatenate(engine._delta_v)
+        df = np.concatenate(engine._delta_f)
+        tfm = engine.index.transform
+        qn = np.asarray(tfm.vec_norm.apply(jnp.asarray(q[None])))[0]
+        fqn = np.asarray(tfm.filt_norm.apply(jnp.asarray(f[None])))[0]
+        dvn = np.asarray(tfm.vec_norm.apply(jnp.asarray(dv)))
+        dfn = np.asarray(tfm.filt_norm.apply(jnp.asarray(df)))
+
+        def cos(a, b):
+            return (a @ b) / (np.linalg.norm(a, axis=-1)
+                              * np.linalg.norm(b) + 1e-8)
+
+        lam = engine.index.config.lam
+        s = lam * cos(dvn, qn) + (1 - lam) * cos(dfn, fqn)
+        base = engine.index.size
+        all_s = np.concatenate([scores, s])
+        all_i = np.concatenate([ids, base + np.arange(len(s))])
+        top = np.argsort(-all_s)[:k]
+        return all_s[top].astype(np.float32), all_i[top]
+
+    todo = []
+    for i in range(n):
+        hit = engine._cache_get(cache_key(queries[i], filters[i]))
+        if hit is not None:
+            out_scores[i], out_ids[i] = hit
+        else:
+            todo.append(i)
+    bs = engine.cfg.batch_size
+    for s in range(0, len(todo), bs):
+        idxs = todo[s:s + bs]
+        pad = bs - len(idxs)
+        q = np.concatenate([queries[idxs],
+                            np.zeros((pad, queries.shape[1]), np.float32)])
+        f = np.concatenate([filters[idxs],
+                            np.zeros((pad, filters.shape[1]), np.float32)])
+        scores, ids = engine._staged_query(jnp.asarray(q), jnp.asarray(f), k)
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        for j, i in enumerate(idxs):
+            sc, di = merge_delta(queries[i], filters[i], scores[j], ids[j])
+            out_scores[i], out_ids[i] = sc, di
+            engine._cache_put(cache_key(queries[i], filters[i]), (sc, di))
+    return out_scores, out_ids
+
+
+def make_engine(corpus, backend: str, use_pallas: bool, batch: int,
+                n_delta: int) -> FCVIEngine:
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                     nlist=64, nprobe=8, use_pallas=use_pallas)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=10, batch_size=batch,
+                                       compact_threshold=4 * n_delta))
+    if n_delta:
+        r = np.random.default_rng(99)
+        eng.insert(r.normal(size=(n_delta, corpus.spec.d)).astype(np.float32),
+                   corpus.filters[:n_delta].copy())
+    return eng
+
+
+def time_search(fn, queries, filters, iters: int):
+    fn(queries, filters)                       # warmup (jit compile)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(queries, filters)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--n-delta", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="flat backend, batch 64 only")
+    args = ap.parse_args()
+
+    spec = CorpusSpec(n=args.n, d=args.d, n_categories=6, n_numeric=2, seed=0)
+    corpus = make_corpus(spec)
+
+    combos = [("flat", False, 64)]
+    if not args.quick:
+        combos += [("flat", True, 64), ("flat", False, 256),
+                   ("flat", True, 256), ("ivf", False, 64), ("ivf", True, 64),
+                   ("ivf", False, 256), ("ivf", True, 256)]
+
+    results = []
+    for backend, use_pallas, batch in combos:
+        q, fq = sample_queries(corpus, batch, seed=1)
+        q, fq = np.asarray(q), np.asarray(fq)
+        eng = make_engine(corpus, backend, use_pallas, batch, args.n_delta)
+
+        def run(queries, filters, eng=eng):
+            eng._cache.clear()                 # measure compute, not cache
+            return eng.search(queries, filters)
+
+        t = time_search(run, q, fq, args.iters)
+        row = dict(backend=backend, use_pallas=use_pallas, batch=batch,
+                   qps=batch / t, ms_per_query=1e3 * t / batch)
+        results.append(row)
+        print(f"{backend:4s} pallas={int(use_pallas)} batch={batch:3d} "
+              f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q")
+
+    # legacy per-query loop baseline (jnp kernels off, flat, batch 64)
+    q, fq = sample_queries(corpus, 64, seed=1)
+    q, fq = np.asarray(q), np.asarray(fq)
+    eng = make_engine(corpus, "flat", False, 64, args.n_delta)
+
+    def run_legacy(queries, filters, eng=eng):
+        eng._cache.clear()
+        return legacy_search(eng, queries, filters)
+
+    t = time_search(run_legacy, q, fq, args.iters)
+    legacy = dict(backend="flat", use_pallas=False, batch=64, qps=64 / t,
+                  ms_per_query=1e3 * t / 64)
+    print(f"legacy loop       batch= 64 qps={legacy['qps']:9.1f}  "
+          f"{legacy['ms_per_query']:.3f} ms/q")
+
+    new64 = next(r for r in results
+                 if r["backend"] == "flat" and not r["use_pallas"]
+                 and r["batch"] == 64)
+    out = dict(
+        config=dict(n=args.n, d=args.d, n_delta=args.n_delta, k=10,
+                    iters=args.iters),
+        results=results,
+        legacy=legacy,
+        speedup_batch64_flat_vs_legacy=new64["qps"] / legacy["qps"],
+    )
+    path = pathlib.Path(__file__).parent / "BENCH_query_path.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"speedup (batch-64 flat vs legacy loop): "
+          f"{out['speedup_batch64_flat_vs_legacy']:.2f}x -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Small jax version-compat shims.
+
+The repo targets the current jax API; these helpers keep it runnable on the
+previous minor series too (e.g. 0.4.x, where ``shard_map`` still lives in
+``jax.experimental`` and ``check_vma`` is spelled ``check_rep``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with psum(1) fallback for older jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

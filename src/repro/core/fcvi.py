@@ -7,6 +7,21 @@ transformed vectors, keep the normalized originals for re-scoring.
 Online: transform the query with its filter vector, over-retrieve
 k' = min(c * k/lambda * 1/alpha^2, N) (Thm 5.4), re-score candidates with
 score = lambda*sim(v,q) + (1-lambda)*sim(f,F_q), return top-k.
+
+Kernel-backed dispatch: every backend implements the
+``repro.index.SearchBackend`` protocol, and ``FCVIConfig.use_pallas``
+threads through the whole query path —
+
+  * candidate generation runs the fused Pallas kernels
+    (``ops.score_topk`` / ``ops.ivf_score_topk_batch`` / ``ops.pq_score_batch``)
+    instead of the pure-jnp scans,
+  * re-scoring (``rescore`` and ``multi_probe_query``) runs the fused
+    combined-cosine kernel ``ops.rescore``.
+
+With ``use_pallas=False`` (the default) the same call graph runs the jnp
+reference implementations; the two paths return identical results (see
+``tests/test_parity_pallas.py``), so the switch is a pure performance knob
+that can be A/B-checked per call site.
 """
 from __future__ import annotations
 
@@ -22,6 +37,8 @@ from repro.core.transform import Transform, fit_transform
 from repro.index import flat as flat_mod
 from repro.index import ivf as ivf_mod
 from repro.index import pq as pq_mod
+from repro.index.backend import SearchBackend
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -40,8 +57,10 @@ class FCVIConfig:
     nprobe: int = 8
     pq_m: int = 8               # PQ subspaces
     pq_ksub: int = 256
+    pq_coarse: int = 32         # residual-PQ coarse centers
     auto_alpha: bool = False    # alpha = max(1, sqrt((1-lam)/lam)), Thm 5.4
     normalize: bool = True
+    use_pallas: bool = False    # route the query path through Pallas kernels
 
     def resolved_alpha(self) -> float:
         if self.auto_alpha:
@@ -54,7 +73,7 @@ class FCVIConfig:
 class FCVIIndex:
     config: FCVIConfig          # static
     transform: Transform
-    backend: object             # FlatIndex | IVFIndex | PQIndex (transformed space)
+    backend: SearchBackend      # FlatIndex | IVFIndex | PQIndex (transformed space)
     vectors_n: Array            # (n, d) normalized originals (for re-scoring)
     filters_n: Array            # (n, m) normalized filters
 
@@ -98,18 +117,47 @@ def build(vectors: Array, filters: Array, config: FCVIConfig,
         backend = ivf_mod.build(transformed, nlist=config.nlist, rng=rng)
     else:
         backend = pq_mod.build(transformed, m_subspaces=config.pq_m,
-                               ksub=config.pq_ksub, rng=rng)
+                               ksub=config.pq_ksub, ncoarse=config.pq_coarse,
+                               rng=rng)
+    assert isinstance(backend, SearchBackend)
     return FCVIIndex(config=config, transform=tfm, backend=backend,
                      vectors_n=vn, filters_n=fn)
 
 
 def _backend_search(index: FCVIIndex, q_t: Array, kp: int):
     cfg = index.config
-    if cfg.backend == "flat":
-        return flat_mod.search(index.backend, q_t, kp)
     if cfg.backend == "ivf":
-        return ivf_mod.search(index.backend, q_t, kp, nprobe=cfg.nprobe)
-    return pq_mod.search(index.backend, q_t, kp)
+        return index.backend.search(q_t, kp, use_pallas=cfg.use_pallas,
+                                    nprobe=cfg.nprobe)
+    return index.backend.search(q_t, kp, use_pallas=cfg.use_pallas)
+
+
+def _pad_rows(x: Array, mult: int) -> Array:
+    pad = -x.shape[0] % mult
+    if not pad:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+
+
+def combined_score(cand_v: Array, cand_f: Array, qn: Array, fqn: Array,
+                   lam, *, use_pallas: bool = False) -> Array:
+    """score = lam*cos(v, q) + (1-lam)*cos(f, F_q) per candidate.
+
+    cand_v: (b, kp, d); cand_f: (b, kp, m); qn: (b, d); fqn: (b, m).
+    With ``use_pallas`` the fused re-ranking kernel computes both cosines and
+    the affine combine in one VMEM pass (batch zero-padded to the kernel's
+    block multiple; zero rows score 0 and are sliced off).
+    """
+    if not use_pallas:
+        s_v = cosine_sim(cand_v, qn[:, None, :])
+        s_f = cosine_sim(cand_f, fqn[:, None, :])
+        return lam * s_v + (1.0 - lam) * s_f
+    b = cand_v.shape[0]
+    bb = min(8, b)
+    s = ops.rescore(_pad_rows(cand_v, bb), _pad_rows(cand_f, bb),
+                    _pad_rows(qn, bb), _pad_rows(fqn, bb), lam, block_b=bb)
+    return s[:b]
 
 
 def rescore(index: FCVIIndex, qn: Array, fqn: Array, cand_idx: Array, k: int):
@@ -118,12 +166,10 @@ def rescore(index: FCVIIndex, qn: Array, fqn: Array, cand_idx: Array, k: int):
     qn: (b, d) normalized queries; fqn: (b, m); cand_idx: (b, k').
     Returns (scores (b,k), ids (b,k)).
     """
-    lam = index.config.lam
     cv = index.vectors_n[cand_idx]               # (b, k', d)
     cf = index.filters_n[cand_idx]               # (b, k', m)
-    s_v = cosine_sim(cv, qn[:, None, :])
-    s_f = cosine_sim(cf, fqn[:, None, :])
-    score = lam * s_v + (1.0 - lam) * s_f
+    score = combined_score(cv, cf, qn, fqn, index.config.lam,
+                           use_pallas=index.config.use_pallas)
     vals, pos = jax.lax.top_k(score, k)
     return vals, jnp.take_along_axis(cand_idx, pos, axis=-1)
 
@@ -167,16 +213,23 @@ def multi_probe_query(index: FCVIIndex, q: Array, filter_probes: Array, k: int,
     sorted_cand = jnp.sort(cand, axis=-1)
     dup = jnp.concatenate(
         [jnp.zeros((b, 1), bool), sorted_cand[:, 1:] == sorted_cand[:, :-1]], axis=-1)
-    # the probe filter used for scoring is the *best* per candidate; re-score
-    # against the centroid of the probes (continuous-match semantics).
-    f_center = jnp.mean(fqn, axis=1)
-    lam = cfg.lam
     cv = index.vectors_n[sorted_cand]
     cf = index.filters_n[sorted_cand]
-    s_v = cosine_sim(cv, qn[:, None, :])
-    # filter sim against nearest probe (max over probes)
-    s_f = jnp.max(cosine_sim(cf[:, :, None, :], fqn[:, None, :, :]), axis=-1)
-    score = lam * s_v + (1.0 - lam) * s_f
+    # filter sim against the NEAREST probe: lam*cos(v,q) is constant across
+    # probes, so score = lam*s_v + (1-lam)*max_r s_f_r. The expensive s_v
+    # pass over the (b, r*kp, d) candidate tensor runs ONCE (lam=1 makes the
+    # fused kernel return pure cos(v,q)); the per-probe passes only touch the
+    # small (b, r*kp, m) filter tensor (cf stands in for both kernel operands,
+    # which collapses the combine to cos(cf, probe) for any lam).
+    s_v = combined_score(cv, cf, qn, fqn[:, 0], 1.0,
+                         use_pallas=cfg.use_pallas)
+    s_f = combined_score(cf, cf, fqn[:, 0], fqn[:, 0], 0.0,
+                         use_pallas=cfg.use_pallas)
+    for j in range(1, r):
+        s_f = jnp.maximum(
+            s_f, combined_score(cf, cf, fqn[:, j], fqn[:, j], 0.0,
+                                use_pallas=cfg.use_pallas))
+    score = cfg.lam * s_v + (1.0 - cfg.lam) * s_f
     score = jnp.where(dup, -jnp.inf, score)
     vals, pos = jax.lax.top_k(score, k)
     return vals, jnp.take_along_axis(sorted_cand, pos, axis=-1)
@@ -226,6 +279,7 @@ def extend(index: FCVIIndex, new_vectors: Array, new_filters: Array) -> FCVIInde
     elif cfg.backend == "ivf":
         backend = ivf_mod.build(transformed, nlist=cfg.nlist)
     else:
-        backend = pq_mod.build(transformed, m_subspaces=cfg.pq_m, ksub=cfg.pq_ksub)
+        backend = pq_mod.build(transformed, m_subspaces=cfg.pq_m,
+                               ksub=cfg.pq_ksub, ncoarse=cfg.pq_coarse)
     return FCVIIndex(config=cfg, transform=tfm, backend=backend,
                      vectors_n=vectors_n, filters_n=filters_n)

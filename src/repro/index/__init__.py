@@ -1,4 +1,5 @@
 """Vector index backends (TPU-native: tiled matmul / IVF / PQ) + distributed search."""
 from repro.index import flat, ivf, pq, distributed
+from repro.index.backend import SearchBackend
 
-__all__ = ["flat", "ivf", "pq", "distributed"]
+__all__ = ["flat", "ivf", "pq", "distributed", "SearchBackend"]

@@ -1,0 +1,39 @@
+"""SearchBackend — the uniform serving interface over all index backends.
+
+``FCVIIndex`` holds one backend (flat / IVF / PQ) and queries it through this
+protocol, so the query path is backend-agnostic and every backend exposes the
+same ``use_pallas`` switch that routes its inner loop through
+``repro.kernels.ops``. Backends are frozen pytree dataclasses whose ``search``
+method delegates to the module-level jit'd function (the dataclass stays a
+pure data container; jit caching keys on the static kwargs).
+
+Contract
+--------
+``search(queries, k, *, use_pallas=False, **opts) -> (scores, ids)`` with
+``queries``: (q, d) in the backend's (transformed) space, ``scores``: (q, k)
+descending — higher is better, negative squared L2 for the exact backends —
+and ``ids``: (q, k) int32 corpus row ids. Rows that cannot be filled (fewer
+than ``k`` reachable candidates) carry ``-inf`` scores.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+
+Array = jax.Array
+
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """Anything FCVI can serve from: sized, searchable, kernel-dispatchable."""
+
+    @property
+    def size(self) -> int:
+        """Number of indexed corpus rows."""
+        ...
+
+    def search(self, queries: Array, k: int, *, use_pallas: bool = False,
+               **opts) -> Tuple[Array, Array]:
+        """Top-k search; see module docstring for the contract."""
+        ...

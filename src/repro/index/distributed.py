@@ -17,8 +17,10 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.core.clustering import assign
 from repro.index import flat as flat_mod
 
@@ -68,7 +70,7 @@ def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
         stride = n_local
         for ax in reversed(axes):
             offset = offset + jax.lax.axis_index(ax) * stride
-            stride = stride * jax.lax.axis_size(ax)
+            stride = stride * axis_size(ax)
         vals, idx = _local_search(vectors, sq_norms, queries, kl, offset)
         # pad so merges are static even when shards are small
         if vals.shape[-1] < kl:
@@ -82,7 +84,7 @@ def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
         return vals, idx
 
     row_spec = P(axes)  # rows sharded over the product of axes
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(row_spec, row_spec, P()),
@@ -144,9 +146,9 @@ def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
         for ax in reversed(axes):
             aidx = jax.lax.axis_index(ax)
             offset = offset + aidx * stride
-            stride = stride * jax.lax.axis_size(ax)
+            stride = stride * axis_size(ax)
             shard_lin = shard_lin + aidx * lin_stride
-            lin_stride = lin_stride * jax.lax.axis_size(ax)
+            lin_stride = lin_stride * axis_size(ax)
         vals, idx = _local_search(vectors, sq_norms, queries, k, offset)
         mine = probe_mask[:, shard_lin]  # (q,)
         vals = jnp.where(mine[:, None], vals, -jnp.inf)
@@ -159,7 +161,7 @@ def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
         return vals, idx
 
     row_spec = P(axes)
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(row_spec, row_spec, P(), P()),

@@ -4,9 +4,23 @@ Brute-force tiled matmul + running top-k is the roofline-optimal search
 primitive on MXU hardware for per-device shards up to ~10M vectors: arithmetic
 intensity of the distance matmul is d/2 FLOPs per corpus byte, which is
 compute-bound for d >= ~512 at bf16 and keeps the MXU busy, unlike
-pointer-chasing graph indexes. The corpus is streamed through VMEM in row
-blocks with a running (value, index) top-k merge so the working set stays
-constant in N.
+pointer-chasing graph indexes.
+
+Two candidate-generation paths, selected by ``use_pallas``:
+
+  * jnp (default): one big matmul, or — with ``block_rows`` — a lax.scan that
+    streams the corpus in row blocks with a running (value, index) top-k merge
+    so the working set stays constant in N.
+  * Pallas: ``repro.kernels.ops.score_topk``, the fused distance + running
+    top-k kernel (corpus and queries are zero-padded to the kernel's tile
+    multiples; padded corpus rows carry +inf squared norms so they score
+    -inf and never surface).
+
+Both paths over-retrieve ``k + REFINE_PAD`` candidates and finish with an
+exact refinement: the matmul expansion ||q||^2 - 2<q,x> + ||x||^2 loses
+~1e-4 absolute precision at fp32 when norms are large (catastrophic
+cancellation) and can misorder near-ties, so the retrieved rows are re-scored
+with a direct (q - x)^2 pass, which restores exact ordering at O(q*k*d) cost.
 """
 from __future__ import annotations
 
@@ -17,7 +31,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 Array = jax.Array
+
+# extra candidates fetched before the exact-refine pass; absorbs ordering
+# flips at the top-k boundary caused by fp32 expansion error
+REFINE_PAD = 8
 
 
 @jax.tree_util.register_pytree_node_class
@@ -43,6 +63,11 @@ class FlatIndex:
     def dim(self) -> int:
         return self.vectors.shape[1]
 
+    def search(self, queries: Array, k: int, *, use_pallas: bool = False,
+               **opts):
+        """SearchBackend protocol entry point."""
+        return search(self, queries, k, use_pallas=use_pallas, **opts)
+
 
 def build(vectors: Array) -> FlatIndex:
     vectors = jnp.asarray(vectors)
@@ -57,15 +82,58 @@ def merge_topk(vals_a: Array, idx_a: Array, vals_b: Array, idx_b: Array, k: int)
     return top_vals, jnp.take_along_axis(idxs, pos, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("k", "block_rows"))
-def search(index: FlatIndex, queries: Array, k: int, block_rows: int = 0):
+def _exact_refine(vectors: Array, queries: Array, cand_idx: Array, k: int,
+                  mask: Optional[Array] = None):
+    """Re-score gathered candidates with a direct (q - x)^2 pass, top-k."""
+    rows = vectors[cand_idx]                                  # (q, kk, d)
+    d2 = jnp.sum((queries[:, None, :] - rows) ** 2, axis=-1)
+    if mask is not None:
+        d2 = jnp.where(mask[cand_idx], d2, jnp.inf)
+    vals, pos = jax.lax.top_k(-d2, k)
+    return vals, jnp.take_along_axis(cand_idx, pos, axis=-1)
+
+
+def _pallas_candidates(index: FlatIndex, queries: Array, kk: int,
+                       block_rows: int = 128, block_q: int = 64) -> Array:
+    """Candidate ids via the fused Pallas kernel, padding to tile multiples."""
+    n, d = index.vectors.shape
+    nq = queries.shape[0]
+    br = min(block_rows, n)
+    bq = min(block_q, nq)
+    n_pad = -n % br
+    q_pad = -nq % bq
+    vecs, sq = index.vectors, index.sq_norms
+    if n_pad:
+        vecs = jnp.concatenate(
+            [vecs, jnp.zeros((n_pad, d), vecs.dtype)], axis=0)
+        # +inf squared norm -> -inf score: pad rows never enter the top-k
+        sq = jnp.concatenate([sq, jnp.full((n_pad,), jnp.inf, sq.dtype)])
+    if q_pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0)
+    _, idx = ops.score_topk(vecs, sq, queries, kk, block_rows=br, block_q=bq)
+    return idx[:nq]
+
+
+@partial(jax.jit, static_argnames=("k", "block_rows", "use_pallas"))
+def search(index: FlatIndex, queries: Array, k: int, block_rows: int = 0,
+           *, use_pallas: bool = False):
     """Top-k by squared-L2 (returned as NEGATIVE distance = score).
 
     queries: (q, d). Returns (scores (q,k), indices (q,k)).
-    ``block_rows`` > 0 streams the corpus in blocks of that many rows with a
-    running top-k (bounded memory); 0 scores everything at once.
+    ``use_pallas`` routes candidate generation through the fused kernel.
+    On the jnp path, ``block_rows`` > 0 streams the corpus in blocks of that
+    many rows with a running top-k (bounded memory); 0 scores everything at
+    once.
     """
     n = index.size
+    k_out = min(k, n)
+    kk = min(n, k_out + REFINE_PAD)
+
+    if use_pallas:
+        cand = _pallas_candidates(index, queries, kk)
+        return _exact_refine(index.vectors, queries, cand, k_out)
+
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
 
     def score_block(rows: Array, row_sq: Array) -> Array:
@@ -74,30 +142,30 @@ def search(index: FlatIndex, queries: Array, k: int, block_rows: int = 0):
 
     if block_rows <= 0 or block_rows >= n:
         scores = score_block(index.vectors, index.sq_norms)
-        vals, idx = jax.lax.top_k(scores, min(k, n))
-        return vals, idx
+        _, cand = jax.lax.top_k(scores, kk)
+        return _exact_refine(index.vectors, queries, cand, k_out)
 
     if n % block_rows != 0:
         raise ValueError(f"block_rows={block_rows} must divide n={n}")
     nblk = n // block_rows
     vecs = index.vectors.reshape(nblk, block_rows, index.dim)
     sqs = index.sq_norms.reshape(nblk, block_rows)
-    kk = min(k, block_rows)
+    kb = min(kk, block_rows)
 
     def body(carry, blk):
         run_vals, run_idx = carry
         rows, row_sq, blk_id = blk
         s = score_block(rows, row_sq)
-        v, i = jax.lax.top_k(s, kk)
+        v, i = jax.lax.top_k(s, kb)
         i = i + blk_id * block_rows
-        return merge_topk(run_vals, run_idx, v, i, k), None
+        return merge_topk(run_vals, run_idx, v, i, kk), None
 
-    init_vals = jnp.full((queries.shape[0], k), -jnp.inf, queries.dtype)
-    init_idx = jnp.zeros((queries.shape[0], k), jnp.int32)
-    (vals, idx), _ = jax.lax.scan(
+    init_vals = jnp.full((queries.shape[0], kk), -jnp.inf, queries.dtype)
+    init_idx = jnp.zeros((queries.shape[0], kk), jnp.int32)
+    (_, cand), _ = jax.lax.scan(
         body, (init_vals, init_idx), (vecs, sqs, jnp.arange(nblk))
     )
-    return vals, idx
+    return _exact_refine(index.vectors, queries, cand, k_out)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -106,7 +174,12 @@ def search_masked(index: FlatIndex, queries: Array, k: int, mask: Array):
 
     mask: (n,) bool — True rows are eligible. Ineligible rows score -inf.
     """
+    n = index.size
+    k_out = min(k, n)
+    kk = min(n, k_out + REFINE_PAD)
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
     scores = -(q2 - 2.0 * queries @ index.vectors.T + index.sq_norms[None, :])
     scores = jnp.where(mask[None, :], scores, -jnp.inf)
-    return jax.lax.top_k(scores, min(k, index.size))
+    _, cand = jax.lax.top_k(scores, kk)
+    vals, idx = _exact_refine(index.vectors, queries, cand, k_out, mask=mask)
+    return jnp.where(jnp.isinf(vals), -jnp.inf, vals), idx

@@ -1,9 +1,18 @@
-"""IVF index — k-means coarse quantizer + padded inverted lists.
+"""IVF index — k-means coarse quantizer + dual list layouts.
 
-TPU adaptation of FAISS-IVF: inverted lists are materialised as a dense padded
-matrix (nlist, max_list) of corpus row ids (pad = -1) so probing is a static
-gather + block matmul, with no host-side variable-length loops. Sub-linear
-cost: each query scores nprobe/nlist of the corpus.
+TPU adaptation of FAISS-IVF with two materialisations of the inverted lists:
+
+  * ``lists`` (nlist, max_list) int32 corpus ids, -1 pad — the compact
+    id layout used by ``add()``/compaction and for translating slab
+    positions back to corpus rows.
+  * ``grouped`` (nlist, max_list, d) dense slab of the corpus rows grouped
+    by list (plus ``grouped_sq``/``valid``) — the SERVING layout, built once
+    at ``build()`` time. Probing a list is then a contiguous slab DMA, which
+    is exactly what the scalar-prefetch ``ivf_score`` Pallas kernel wants:
+    the probe ids picked by the coarse quantizer index the BlockSpec
+    index_map directly, so no per-row gather ever happens on the hot path.
+
+Sub-linear cost: each query scores nprobe/nlist of the corpus.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clustering import kmeans, assign
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -22,14 +32,19 @@ Array = jax.Array
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
-    vectors: Array    # (n, d) corpus (transformed space)
-    sq_norms: Array   # (n,)
-    centroids: Array  # (nlist, d)
-    lists: Array      # (nlist, max_list) int32 corpus ids, -1 pad
+    vectors: Array     # (n, d) corpus (transformed space)
+    sq_norms: Array    # (n,)
+    centroids: Array   # (nlist, d)
+    lists: Array       # (nlist, max_list) int32 corpus ids, -1 pad
     list_sizes: Array  # (nlist,)
+    grouped: Array     # (nlist, max_list, d) corpus grouped by list (serving)
+    grouped_sq: Array  # (nlist, max_list)
+    valid: Array       # (nlist, max_list) float 0/1 (1 = real row)
 
     def tree_flatten(self):
-        return (self.vectors, self.sq_norms, self.centroids, self.lists, self.list_sizes), None
+        return (self.vectors, self.sq_norms, self.centroids, self.lists,
+                self.list_sizes, self.grouped, self.grouped_sq,
+                self.valid), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -47,16 +62,27 @@ class IVFIndex:
     def max_list(self) -> int:
         return self.lists.shape[1]
 
+    def search(self, queries: Array, k: int, *, use_pallas: bool = False,
+               **opts):
+        """SearchBackend protocol entry point."""
+        return search(self, queries, k, use_pallas=use_pallas, **opts)
+
+
+def _grouped_slabs(vectors: Array, sq_norms: Array, lists: Array):
+    """Materialise the dense (nlist, max_list, d) serving slabs from ids."""
+    safe = jnp.maximum(lists, 0)
+    return (vectors[safe], sq_norms[safe],
+            (lists >= 0).astype(jnp.float32))
+
 
 def build(vectors: Array, nlist: int, rng: Array | None = None,
           iters: int = 15, pad_to_multiple: int = 8) -> IVFIndex:
-    """Train coarse quantizer and materialise padded lists (host-side)."""
+    """Train coarse quantizer and materialise both list layouts (host-side)."""
     vectors = jnp.asarray(vectors, jnp.float32)
     if rng is None:
         rng = jax.random.PRNGKey(0)
     centroids, labels = kmeans(rng, vectors, nlist, iters=iters)
     labels_np = np.asarray(labels)
-    n = vectors.shape[0]
     buckets = [np.nonzero(labels_np == j)[0] for j in range(nlist)]
     max_list = max(1, max(len(b) for b in buckets))
     if max_list % pad_to_multiple:
@@ -66,26 +92,44 @@ def build(vectors: Array, nlist: int, rng: Array | None = None,
     for j, b in enumerate(buckets):
         lists[j, : len(b)] = b
         sizes[j] = len(b)
+    lists = jnp.asarray(lists)
+    sq_norms = jnp.sum(vectors * vectors, axis=-1)
+    grouped, grouped_sq, valid = _grouped_slabs(vectors, sq_norms, lists)
     return IVFIndex(
         vectors=vectors,
-        sq_norms=jnp.sum(vectors * vectors, axis=-1),
+        sq_norms=sq_norms,
         centroids=centroids,
-        lists=jnp.asarray(lists),
+        lists=lists,
         list_sizes=jnp.asarray(sizes),
+        grouped=grouped,
+        grouped_sq=grouped_sq,
+        valid=valid,
     )
 
 
-@partial(jax.jit, static_argnames=("k", "nprobe"))
-def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8):
+@partial(jax.jit, static_argnames=("k", "nprobe", "use_pallas"))
+def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8,
+           *, use_pallas: bool = False):
     """Probe the nprobe nearest lists per query; exact scoring inside lists.
 
     Returns (scores (q,k), indices (q,k)); scores are negative squared L2.
+    ``use_pallas`` routes the slab scoring through the batched scalar-prefetch
+    kernel (``ops.ivf_score_topk_batch``) over the grouped layout.
     """
     nprobe = min(nprobe, index.nlist)
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
     c2 = jnp.sum(index.centroids * index.centroids, axis=-1)
     cd = -(q2 - 2.0 * queries @ index.centroids.T + c2[None, :])  # (q, nlist)
     _, probe = jax.lax.top_k(cd, nprobe)  # (q, nprobe)
+
+    if use_pallas:
+        vals, flat_ids = ops.ivf_score_topk_batch(
+            index.grouped, index.grouped_sq, index.valid,
+            probe.astype(jnp.int32), queries, k)
+        cand = index.lists.reshape(-1)[flat_ids]        # -1 on padded slots
+        vals = vals - q2                                # back to -||q - x||^2
+        idx = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(cand, 0))
+        return vals, idx
 
     def one_query(qv, q_sq, probes):
         cand = index.lists[probes].reshape(-1)            # (nprobe*max_list,)
@@ -109,9 +153,10 @@ def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8):
 def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
     """Incremental insert (host-side rebuild of the padded lists).
 
-    Centroids are kept fixed (standard IVF practice); lists regrow. The
-    serving engine batches adds through a delta buffer and calls this on
-    compaction, so the O(n) rebuild amortises.
+    Centroids are kept fixed (standard IVF practice); lists regrow and the
+    serving slabs are re-materialised. The serving engine batches adds
+    through a delta buffer and calls this on compaction, so the O(n) rebuild
+    amortises.
     """
     new_vectors = jnp.asarray(new_vectors, jnp.float32)
     labels = assign(new_vectors, index.centroids)
@@ -132,10 +177,16 @@ def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
     for i, lbl in enumerate(labels_np):
         out[lbl, sizes_np[lbl]] = base + i
         sizes_np[lbl] += 1
+    lists = jnp.asarray(out)
+    sq_norms = jnp.sum(all_vecs * all_vecs, axis=-1)
+    grouped, grouped_sq, valid = _grouped_slabs(all_vecs, sq_norms, lists)
     return IVFIndex(
         vectors=all_vecs,
-        sq_norms=jnp.sum(all_vecs * all_vecs, axis=-1),
+        sq_norms=sq_norms,
         centroids=index.centroids,
-        lists=jnp.asarray(out),
+        lists=lists,
         list_sizes=jnp.asarray(sizes_np),
+        grouped=grouped,
+        grouped_sq=grouped_sq,
+        valid=valid,
     )

@@ -1,13 +1,16 @@
 """Pallas kernel: IVF probed-slab scoring with scalar-prefetched list ids.
 
 The IVF corpus is stored grouped-by-list as a dense (nlist, max_list, d)
-slab array. The probe ids selected by the coarse quantizer are passed as a
-scalar-prefetch operand so the BlockSpec index_map can route each grid step's
-DMA directly to the probed slab — the TPU idiom for data-dependent gathers
-(the block-table indirection pattern), replacing the GPU's per-row gather.
+slab array (built once at ``IVFIndex.build`` time). The probe ids selected by
+the coarse quantizer are passed as a scalar-prefetch operand so the BlockSpec
+index_map can route each grid step's DMA directly to the probed slab — the
+TPU idiom for data-dependent gathers (the block-table indirection pattern),
+replacing the GPU's per-row gather.
 
-A running top-k accumulates across the sequential probe grid dimension, so
-only nprobe/nlist of the corpus is ever read.
+The batched variant runs a (batch, nprobe) grid: the probe dimension is the
+inner (sequential) axis, so each query's running top-k accumulates across its
+probes while the output block revisits the same (1, k) row. Only
+nprobe/nlist of the corpus is ever read per query.
 """
 from __future__ import annotations
 
@@ -21,9 +24,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.fused_score_topk import _select_topk, NEG_INF
 
 
-def _kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref, idx_ref,
-            *, k: int, max_list: int):
-    j = pl.program_id(0)
+def _batch_kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref,
+                  idx_ref, *, k: int, max_list: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
@@ -33,11 +37,11 @@ def _kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref, idx_ref,
     slab = slab_ref[...][0]            # (max_list, d)
     sq = sq_ref[...][0]                # (max_list,)
     ok = valid_ref[...][0]             # (max_list,) float 0/1
-    q = q_ref[...]                     # (d,)
+    q = q_ref[...][0]                  # (d,)
 
     s = 2.0 * jnp.dot(slab, q, preferred_element_type=jnp.float32) - sq
     s = jnp.where(ok > 0.5, s, NEG_INF)[None, :]        # (1, max_list)
-    list_id = probes_ref[j]
+    list_id = probes_ref[i, j]
     gids = (list_id * max_list
             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
 
@@ -49,41 +53,54 @@ def _kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref, idx_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k: int, *,
-                   interpret: bool = True):
-    """Single-query probed search.
+def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k: int,
+                         *, interpret: bool = True):
+    """Multi-query probed search over the grouped slab layout.
 
     grouped: (nlist, max_list, d); grouped_sq: (nlist, max_list);
-    valid: (nlist, max_list) float 0/1; probes: (nprobe,) int32;
-    query: (d,). Returns (vals (k,), flat_ids (k,)) with flat ids into
-    grouped.reshape(-1, d). Scores are 2<x,q> - ||x||^2 (monotone in
+    valid: (nlist, max_list) float 0/1; probes: (b, nprobe) int32;
+    queries: (b, d). Returns (vals (b, k), flat_ids (b, k)) with flat ids
+    into grouped.reshape(-1, d). Scores are 2<x,q> - ||x||^2 (monotone in
     negative squared distance — the ||q||^2 constant is dropped).
     """
     nlist, max_list, d = grouped.shape
-    nprobe = probes.shape[0]
-    kernel = functools.partial(_kernel, k=k, max_list=max_list)
+    b, nprobe = probes.shape
+    kernel = functools.partial(_batch_kernel, k=k, max_list=max_list)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nprobe,),
+        grid=(b, nprobe),
         in_specs=[
-            pl.BlockSpec((1, max_list, d), lambda j, probes: (probes[j], 0, 0)),
-            pl.BlockSpec((1, max_list), lambda j, probes: (probes[j], 0)),
-            pl.BlockSpec((1, max_list), lambda j, probes: (probes[j], 0)),
-            pl.BlockSpec((d,), lambda j, probes: (0,)),
+            pl.BlockSpec((1, max_list, d), lambda i, j, probes: (probes[i, j], 0, 0)),
+            pl.BlockSpec((1, max_list), lambda i, j, probes: (probes[i, j], 0)),
+            pl.BlockSpec((1, max_list), lambda i, j, probes: (probes[i, j], 0)),
+            pl.BlockSpec((1, d), lambda i, j, probes: (i, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, k), lambda j, probes: (0, 0)),
-            pl.BlockSpec((1, k), lambda j, probes: (0, 0)),
+            pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
         ),
     )
     vals, idx = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=(
-            jax.ShapeDtypeStruct((1, k), jnp.float32),
-            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
         ),
         interpret=interpret,
-    )(probes, grouped, grouped_sq, valid, query)
+    )(probes, grouped, grouped_sq, valid, queries)
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k: int, *,
+                   interpret: bool = True):
+    """Single-query probed search (batch size 1 of the batched kernel).
+
+    probes: (nprobe,) int32; query: (d,). Returns (vals (k,), flat_ids (k,)).
+    """
+    vals, idx = ivf_score_topk_batch(
+        grouped, grouped_sq, valid, probes[None, :], query[None, :], k,
+        interpret=interpret)
     return vals[0], idx[0]

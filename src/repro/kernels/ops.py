@@ -1,9 +1,28 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels — the serving dispatch layer.
 
-On CPU (this container) kernels run in interpret mode; on TPU they compile
-natively. ``use_pallas=False`` falls back to the pure-jnp oracles — the
-serving engine exposes this as a config switch so every call site can be
-A/B-checked against the reference.
+Every function takes a ``use_pallas`` switch: ``True`` runs the Pallas kernel
+(natively compiled on TPU, interpret mode elsewhere), ``False`` runs the
+pure-jnp oracle from ``repro.kernels.ref``. The two paths are semantically
+identical, so every call site can be A/B-checked (see
+``tests/test_parity_pallas.py``).
+
+These wrappers are the *actual* serving path, not a side demo: the index
+backends dispatch here when ``FCVIConfig.use_pallas`` is set —
+
+  * ``score_topk``        <- ``repro.index.flat.search`` (fused distance +
+    running top-k over streamed corpus blocks),
+  * ``ivf_score_topk_batch`` <- ``repro.index.ivf.search`` (scalar-prefetch
+    DMA over the grouped (nlist, max_list, d) slab layout, batched over
+    queries),
+  * ``pq_score_batch``    <- ``repro.index.pq.search`` (one-hot-matmul ADC
+    over the residual-PQ combined (coarse, code) LUT),
+  * ``rescore``           <- ``repro.core.fcvi.rescore`` / ``multi_probe_query``
+    (fused combined-cosine re-ranking),
+  * ``fused_transform``   <- offline transform path.
+
+Score conventions: ``score_topk`` returns full negative squared L2;
+``ivf_score_topk*`` drops the ``||q||^2`` constant (the caller re-adds it);
+``pq_score*`` returns squared distances.
 """
 from __future__ import annotations
 
@@ -14,8 +33,10 @@ from repro.kernels import ref
 from repro.kernels.fcvi_transform import fused_transform as _fused_transform
 from repro.kernels.fused_score_topk import score_topk as _score_topk
 from repro.kernels.rescore import rescore as _rescore
-from repro.kernels.ivf_score import ivf_score_topk as _ivf_score_topk
-from repro.kernels.pq_lut import pq_score as _pq_score
+from repro.kernels.ivf_score import (ivf_score_topk as _ivf_score_topk,
+                                     ivf_score_topk_batch as _ivf_score_topk_batch)
+from repro.kernels.pq_lut import (pq_score as _pq_score,
+                                  pq_score_batch as _pq_score_batch)
 
 
 def _interpret() -> bool:
@@ -56,8 +77,27 @@ def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k, *,
                            interpret=_interpret())
 
 
+def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k, *,
+                         use_pallas: bool = True):
+    """Batched probed-slab search: probes (b, nprobe), queries (b, d)."""
+    if not use_pallas:
+        return ref.ref_ivf_score_topk_batch(grouped, grouped_sq, valid > 0.5,
+                                            probes, queries, k)
+    return _ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries,
+                                 k, interpret=_interpret())
+
+
 def pq_score(codes, lut, *, use_pallas: bool = True, block_rows: int = 512):
     if not use_pallas:
         return ref.ref_pq_score(codes, lut)
     return _pq_score(codes, lut, block_rows=block_rows,
                      interpret=_interpret())
+
+
+def pq_score_batch(codes, luts, *, use_pallas: bool = True,
+                   block_rows: int = 256):
+    """Multi-query ADC: codes (n, M), luts (q, M, ksub) -> (q, n) scores."""
+    if not use_pallas:
+        return ref.ref_pq_score_batch(codes, luts)
+    return _pq_score_batch(codes, luts, block_rows=block_rows,
+                           interpret=_interpret())

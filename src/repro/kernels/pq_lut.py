@@ -53,3 +53,51 @@ def pq_score(codes, lut, *, block_rows: int = DEF_BLOCK_ROWS,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         interpret=interpret,
     )(codes, lut)
+
+
+def _batch_kernel(codes_ref, lut_ref, out_ref, *, ksub: int):
+    codes = codes_ref[...]            # (bn, M) int32
+    lut = lut_ref[...][0]             # (M, ksub)
+    bn, m = codes.shape
+    total = jnp.zeros((bn,), jnp.float32)
+    for j in range(m):                # M is small + static: unrolled
+        onehot = (codes[:, j][:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (bn, ksub), 1))
+        total = total + jnp.dot(onehot.astype(jnp.float32), lut[j],
+                                preferred_element_type=jnp.float32)
+    out_ref[...] = total[None, :].astype(out_ref.dtype)
+
+
+DEF_BATCH_BLOCK_ROWS = 256
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pq_score_batch(codes, luts, *, block_rows: int = DEF_BATCH_BLOCK_ROWS,
+                   interpret: bool = True):
+    """Multi-query ADC: codes (n, M) int32, luts (q, M, ksub) -> scores (q, n).
+
+    Grid is (query, row-block): each query's LUT stays resident while code
+    blocks stream through VMEM. Rows are zero-padded to a block multiple and
+    the pad columns sliced off the result.
+    """
+    n, m = codes.shape
+    q, _, ksub = luts.shape
+    block_rows = min(block_rows, n)
+    pad = -n % block_rows
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((pad, m), codes.dtype)], axis=0)
+    n_pad = n + pad
+    kernel = functools.partial(_batch_kernel, ksub=ksub)
+    out = pl.pallas_call(
+        kernel,
+        grid=(q, n_pad // block_rows),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, m, ksub), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n_pad), jnp.float32),
+        interpret=interpret,
+    )(codes, luts)
+    return out[:, :n]

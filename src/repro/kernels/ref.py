@@ -75,6 +75,35 @@ def ref_ivf_score_topk(grouped: Array, grouped_sq: Array, valid: Array,
     return vals, flat_ids.reshape(-1)[pos]
 
 
+def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
+                             probes: Array, queries: Array, k: int):
+    """Batched IVF probed-slab scoring in the KERNEL's score convention.
+
+    probes: (b, nprobe); queries: (b, d). Returns (vals (b, k), flat_ids
+    (b, k)) with scores 2<x,q> - ||x||^2 (the ||q||^2 constant dropped, like
+    the Pallas kernel) and flat ids into grouped.reshape(-1, d).
+    """
+    max_list = grouped.shape[1]
+
+    def one(probe, query):
+        slabs = grouped[probe]                     # (nprobe, max_list, d)
+        sq = grouped_sq[probe]
+        ok = valid[probe]
+        s = 2.0 * (slabs @ query) - sq
+        s = jnp.where(ok, s, -jnp.inf)
+        flat_ids = probe[:, None] * max_list + jnp.arange(max_list)[None, :]
+        vals, pos = jax.lax.top_k(s.reshape(-1), k)
+        ids = flat_ids.reshape(-1)[pos]
+        return vals, jnp.where(jnp.isneginf(vals), 0, ids)
+
+    return jax.vmap(one)(probes, queries)
+
+
+def ref_pq_score_batch(codes: Array, luts: Array) -> Array:
+    """Multi-query ADC: codes (n, M), luts (q, M, ksub) -> scores (q, n)."""
+    return jax.vmap(lambda lut: ref_pq_score(codes, lut))(luts)
+
+
 def ref_pq_score(codes: Array, lut: Array) -> Array:
     """ADC: scores (n,) = sum_m lut[m, codes[n, m]] (squared distances)."""
     n, m = codes.shape

@@ -2,26 +2,38 @@
 
 Defined as functions (not module constants) so importing this module never
 touches jax device state — the dry-run sets XLA_FLAGS before first jax init.
+
+``make_mesh`` papers over the jax API skew: ``axis_types`` (and
+``jax.sharding.AxisType``) only exist from jax 0.5; on older releases every
+mesh axis is implicitly Auto, so the kwarg is simply dropped.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 from jax.sharding import Mesh
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Version-compatible ``jax.make_mesh`` with all-Auto axis types."""
+    if hasattr(jax.sharding, "AxisType"):
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(tuple(shape), tuple(axes), axis_types=types)
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Whatever this process actually has (tests / local runs)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 def mesh_devices(mesh: Mesh) -> int:

@@ -2,25 +2,33 @@
 
 Implements the paper's serving-side optimizations on top of FCVIIndex:
   * request batching (group queries, amortise index traversal),
-  * filter-aware result cache (common filter combinations hit the cache),
+  * filter-aware result cache (common filter combinations hit the cache;
+    cache keys are quantized once per batch with a single vectorized round),
   * adaptive k' with two-stage escalation (early-termination dual: retrieve
     with a small k', escalate only queries whose top-k margin is ambiguous),
-  * delta buffer for inserts + background compaction (updates without
-    rebuilding the main index per insert),
+  * delta buffer for inserts + background compaction: new rows live in a
+    device-resident delta ``FlatIndex`` (transformed space) between
+    compactions; every batch runs ONE jnp exact search + fused combined-score
+    pass over the delta and merges it into the main results with
+    ``merge_topk`` — no per-query host loops anywhere on the hot path,
   * multi-probe execution for range/disjunctive predicates.
+
+When ``FCVIConfig.use_pallas`` is set on the wrapped index, the whole path —
+backend candidate generation, re-scoring, and the delta merge — runs through
+the Pallas kernels in ``repro.kernels.ops``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fcvi
+from repro.core import fcvi, theory
 from repro.core.baselines import BoxPredicate
 from repro.core.fcvi import FCVIConfig, FCVIIndex
 from repro.index import flat as flat_mod
@@ -52,6 +60,15 @@ class EngineStats:
         return self.queries / self.total_time_s if self.total_time_s else 0.0
 
 
+@dataclasses.dataclass
+class _DeltaBuffer:
+    """Device-resident view of the un-compacted inserts."""
+
+    vn: jax.Array        # (nd, d) normalized new vectors
+    fn: jax.Array        # (nd, m) normalized new filters
+    flat: flat_mod.FlatIndex  # transformed-space index over the delta rows
+
+
 class FCVIEngine:
     def __init__(self, index: FCVIIndex, config: EngineConfig = EngineConfig()):
         self.index = index
@@ -60,13 +77,16 @@ class FCVIEngine:
         self._cache: "collections.OrderedDict" = collections.OrderedDict()
         self._delta_v: list = []
         self._delta_f: list = []
+        self._delta: Optional[_DeltaBuffer] = None
 
     # -- cache ------------------------------------------------------------
-    def _cache_key(self, q: np.ndarray, f: np.ndarray) -> bytes:
+    def _cache_keys(self, queries: np.ndarray,
+                    filters: np.ndarray) -> List[bytes]:
+        """Quantized keys for the whole batch: one vectorized round."""
         r = self.cfg.cache_round
-        qq = np.round(q / r).astype(np.int32)
-        ff = np.round(f / r).astype(np.int32)
-        return qq.tobytes() + b"#" + ff.tobytes()
+        qq = np.round(queries / r).astype(np.int32)
+        ff = np.round(filters / r).astype(np.int32)
+        return [q.tobytes() + b"#" + f.tobytes() for q, f in zip(qq, ff)]
 
     def _cache_get(self, key: bytes):
         if key in self._cache:
@@ -89,9 +109,9 @@ class FCVIEngine:
         out_scores = np.zeros((n, k), np.float32)
         out_ids = np.zeros((n, k), np.int64)
 
+        keys = self._cache_keys(queries, filters)
         todo = []
-        for i in range(n):
-            key = self._cache_key(queries[i], filters[i])
+        for i, key in enumerate(keys):
             hit = self._cache_get(key)
             if hit is not None:
                 out_scores[i], out_ids[i] = hit
@@ -107,12 +127,13 @@ class FCVIEngine:
                                 np.zeros((pad, queries.shape[1]), np.float32)])
             f = np.concatenate([filters[idxs],
                                 np.zeros((pad, filters.shape[1]), np.float32)])
-            scores, ids = self._staged_query(jnp.asarray(q), jnp.asarray(f), k)
+            qj, fj = jnp.asarray(q), jnp.asarray(f)
+            scores, ids = self._staged_query(qj, fj, k)
+            scores, ids = self._merge_delta_batch(qj, fj, scores, ids, k)
             scores, ids = np.asarray(scores), np.asarray(ids)
             for j, i in enumerate(idxs):
-                sc, di = self._merge_delta(queries[i], filters[i], scores[j], ids[j], k)
-                out_scores[i], out_ids[i] = sc, di
-                self._cache_put(self._cache_key(queries[i], filters[i]), (sc, di))
+                out_scores[i], out_ids[i] = scores[j], ids[j]
+                self._cache_put(keys[i], (scores[j], ids[j]))
 
         self.stats.queries += n
         self.stats.total_time_s += time.perf_counter() - t0
@@ -124,7 +145,6 @@ class FCVIEngine:
         need = np.asarray(margin < self.cfg.escalate_margin)
         if need.any():
             self.stats.escalations += int(need.sum())
-            from repro.core import theory
             cfg = self.index.config
             kp2 = theory.k_prime(k, cfg.lam, cfg.resolved_alpha(),
                                  self.index.size,
@@ -150,11 +170,24 @@ class FCVIEngine:
         self._delta_f.append(np.asarray(filters, np.float32))
         self.stats.inserts += len(vectors)
         self._cache.clear()  # results may change
+        self._delta = None   # invalidate; rebuilt lazily on the next search
         if sum(len(v) for v in self._delta_v) >= self.cfg.compact_threshold:
             self.compact()
 
     def delta_size(self) -> int:
         return sum(len(v) for v in self._delta_v)
+
+    def _ensure_delta(self) -> Optional[_DeltaBuffer]:
+        """Materialise the device-resident delta buffer on first use after an
+        insert (lazy, so back-to-back inserts cost nothing until a query)."""
+        if self._delta is None and self._delta_v:
+            tfm = self.index.transform
+            vn = tfm.vec_norm.apply(jnp.asarray(np.concatenate(self._delta_v)))
+            fn = tfm.filt_norm.apply(jnp.asarray(np.concatenate(self._delta_f)))
+            self._delta = _DeltaBuffer(
+                vn=vn, fn=fn,
+                flat=flat_mod.build(tfm.apply_normalized(vn, fn)))
+        return self._delta
 
     def compact(self):
         if not self._delta_v:
@@ -163,27 +196,41 @@ class FCVIEngine:
         f = np.concatenate(self._delta_f)
         self.index = fcvi.extend(self.index, jnp.asarray(v), jnp.asarray(f))
         self._delta_v, self._delta_f = [], []
+        self._delta = None
         self.stats.compactions += 1
 
-    def _merge_delta(self, q, f, scores, ids, k):
-        """Exact search over the (small) delta buffer, merged into results."""
-        if not self._delta_v:
+    def _merge_delta_batch(self, q, f, scores, ids, k):
+        """One batched exact search over the delta buffer, merged into results.
+
+        Candidate pruning uses the transformed-space delta FlatIndex (itself
+        kernel-backed when use_pallas is on); the survivors get the exact
+        fused combined-cosine score and merge into the main top-k with
+        ``merge_topk``. Entirely device-side — no per-query numpy.
+        """
+        delta = self._ensure_delta()
+        if delta is None:
             return scores, ids
-        dv = np.concatenate(self._delta_v)
-        df = np.concatenate(self._delta_f)
+        cfg = self.index.config
         tfm = self.index.transform
-        qn = np.asarray(tfm.vec_norm.apply(jnp.asarray(q[None])))[0]
-        fqn = np.asarray(tfm.filt_norm.apply(jnp.asarray(f[None])))[0]
-        dvn = np.asarray(tfm.vec_norm.apply(jnp.asarray(dv)))
-        dfn = np.asarray(tfm.filt_norm.apply(jnp.asarray(df)))
+        nd = delta.vn.shape[0]
+        qn = tfm.vec_norm.apply(q)
+        fqn = tfm.filt_norm.apply(f)
 
-        def cos(a, b):
-            return (a @ b) / (np.linalg.norm(a, axis=-1) * np.linalg.norm(b) + 1e-8)
-
-        lam = self.index.config.lam
-        s = lam * cos(dvn, qn) + (1 - lam) * cos(dfn, fqn)
-        base = self.index.size
-        all_s = np.concatenate([scores, s])
-        all_i = np.concatenate([ids, base + np.arange(len(s))])
-        top = np.argsort(-all_s)[:k]
-        return all_s[top].astype(np.float32), all_i[top]
+        # same over-retrieval bound as the main path (Thm 5.4), so pruning
+        # the delta in transformed space never costs more recall than the
+        # backend search does
+        kp = theory.k_prime(k, cfg.lam, cfg.resolved_alpha(), nd, cfg.c)
+        kd = min(nd, max(kp, 4 * k))
+        if kd < nd:
+            q_t = tfm.apply_normalized(qn, fqn)
+            _, cand = flat_mod.search(delta.flat, q_t, kd,
+                                      use_pallas=cfg.use_pallas)
+        else:
+            cand = jnp.broadcast_to(jnp.arange(nd)[None, :],
+                                    (q.shape[0], nd))
+        s = fcvi.combined_score(delta.vn[cand], delta.fn[cand], qn, fqn,
+                                cfg.lam, use_pallas=cfg.use_pallas)
+        dvals, dpos = jax.lax.top_k(s, min(k, kd))
+        dids = self.index.size + jnp.take_along_axis(cand, dpos, axis=-1)
+        return flat_mod.merge_topk(scores, ids, dvals,
+                                   dids.astype(ids.dtype), k)

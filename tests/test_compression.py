@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # graceful skip when not installed
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (quantize_int8, dequantize_int8,

@@ -75,6 +75,39 @@ def test_ivf_score_topk(nlist, maxl, d, nprobe, k):
     assert (np.asarray(i1) == np.asarray(i2)).all()
 
 
+@pytest.mark.parametrize("b,nlist,maxl,d,nprobe,k",
+                         [(4, 8, 64, 64, 3, 8), (6, 16, 128, 32, 5, 16)])
+def test_ivf_score_topk_batch(b, nlist, maxl, d, nprobe, k):
+    """Batched probed-slab kernel vs vmapped oracle (kernel convention)."""
+    r = np.random.default_rng(b + nlist)
+    grouped = _rand(r, (nlist, maxl, d), jnp.float32)
+    gsq = jnp.sum(grouped * grouped, -1)
+    valid = jnp.asarray((r.random((nlist, maxl)) > 0.15).astype(np.float32))
+    probes = jnp.asarray(np.stack(
+        [r.choice(nlist, nprobe, replace=False) for _ in range(b)]
+    ).astype(np.int32))
+    qs = _rand(r, (b, d), jnp.float32)
+    v1, i1 = ops.ivf_score_topk_batch(grouped, gsq, valid, probes, qs, k)
+    v2, i2 = ops.ivf_score_topk_batch(grouped, gsq, valid, probes, qs, k,
+                                      use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("n,M,ksub,q", [(500, 4, 32, 3), (512, 8, 64, 5)])
+def test_pq_score_batch(n, M, ksub, q):
+    """Multi-query ADC kernel, incl. row counts that need padding."""
+    r = np.random.default_rng(n + q)
+    codes = jnp.asarray(r.integers(0, ksub, (n, M)).astype(np.int32))
+    luts = jnp.asarray(r.random((q, M, ksub)).astype(np.float32))
+    got = ops.pq_score_batch(codes, luts, block_rows=128)
+    want = ops.pq_score_batch(codes, luts, use_pallas=False)
+    assert got.shape == (q, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("n,M,ksub", [(512, 8, 64), (1024, 16, 256),
                                       (256, 4, 16)])
 def test_pq_score(n, M, ksub):

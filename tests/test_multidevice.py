@@ -25,11 +25,11 @@ def test_sharded_search_matches_flat():
     run_in_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.index import flat as flat_mod
         from repro.index.distributed import sharded_search_fn
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         r = np.random.default_rng(0)
         x = jnp.asarray(r.normal(size=(1024, 32)).astype(np.float32))
         q = jnp.asarray(r.normal(size=(16, 32)).astype(np.float32))
@@ -50,6 +50,7 @@ def test_sharded_train_step_matches_single_device():
     run_in_subprocess("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config, reduced
         from repro.models import model as M
         from repro.train import loop as train_loop, optimizer as opt
@@ -67,8 +68,7 @@ def test_sharded_train_step_matches_single_device():
         p_ref, _, m_ref = jax.jit(step)(params, state, batch)
 
         # 4x2 mesh sharded
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = AxisRules(mesh)
         with use_rules(rules):
             specs = param_spec_tree(params, rules)
@@ -99,11 +99,11 @@ def test_seq_parallel_attention_core():
     run_in_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.models.attention import chunked_attention
         from repro.distributed.sharding import AxisRules, use_rules
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         r = np.random.default_rng(0)
         q = jnp.asarray(r.normal(size=(2, 64, 6, 16)).astype(np.float32))
         k = jnp.asarray(r.normal(size=(2, 64, 2, 16)).astype(np.float32))

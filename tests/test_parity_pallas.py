@@ -1,0 +1,129 @@
+"""use_pallas=True vs False must be a pure performance knob: identical results.
+
+Covers the full query path (fcvi.query) on all three backends, the batched
+IVF kernel, multi-probe, the serving engine with a live delta buffer, and
+non-divisible batch/corpus shapes (n=1000 is not a multiple of the kernel's
+128-row blocks; b=5 is not a multiple of the 64-query / 8-rescore blocks).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build, query, multi_probe_query
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.index import flat as flat_mod
+from repro.index import ivf as ivf_mod
+from repro.index import pq as pq_mod
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    return corpus, jnp.asarray(q), jnp.asarray(fq)
+
+
+def _with_pallas(index):
+    return dataclasses.replace(
+        index, config=dataclasses.replace(index.config, use_pallas=True))
+
+
+def _assert_same(a, b, atol=1e-4):
+    (s0, i0), (s1, i1) = a, b
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=atol)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf", "pq"])
+def test_query_parity(data, backend):
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                     nlist=16, nprobe=16, pq_m=8, pq_ksub=32, pq_coarse=8)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    _assert_same(query(idx, q, fq, 7), query(_with_pallas(idx), q, fq, 7))
+
+
+def test_multi_probe_parity(data):
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    probes = jnp.stack([fq + 0.1 * i for i in range(3)], axis=1)
+    _assert_same(multi_probe_query(idx, q, probes, 7),
+                 multi_probe_query(_with_pallas(idx), q, probes, 7))
+
+
+@pytest.mark.parametrize("n,b,k", [(1000, 5, 10), (256, 3, 300)])
+def test_flat_backend_parity(n, b, k):
+    """Direct backend parity, incl. k > n clamping and padded shapes."""
+    r = np.random.default_rng(n)
+    x = jnp.asarray(r.normal(size=(n, 32)).astype(np.float32))
+    q = jnp.asarray(r.normal(size=(b, 32)).astype(np.float32))
+    idx = flat_mod.build(x)
+    _assert_same(idx.search(q, k), idx.search(q, k, use_pallas=True))
+
+
+def test_ivf_backend_parity_including_unfilled_rows():
+    """nprobe=1 with k > list size: -inf padding rows must agree too."""
+    r = np.random.default_rng(7)
+    x = jnp.asarray(r.normal(size=(500, 32)).astype(np.float32))
+    q = jnp.asarray(r.normal(size=(4, 32)).astype(np.float32))
+    idx = ivf_mod.build(x, nlist=16)
+    for k, nprobe in ((10, 4), (200, 1)):
+        v0, i0 = ivf_mod.search(idx, q, k, nprobe=nprobe)
+        v1, i1 = ivf_mod.search(idx, q, k, nprobe=nprobe, use_pallas=True)
+        v0, v1 = np.asarray(v0), np.asarray(v1)
+        assert (np.isneginf(v0) == np.isneginf(v1)).all()
+        fin = np.isfinite(v0)
+        np.testing.assert_allclose(v0[fin], v1[fin], rtol=1e-4, atol=1e-4)
+        assert (np.asarray(i0)[fin] == np.asarray(i1)[fin]).all()
+
+
+def test_pq_backend_parity():
+    r = np.random.default_rng(11)
+    x = jnp.asarray(r.normal(size=(700, 32)).astype(np.float32))
+    q = jnp.asarray(r.normal(size=(3, 32)).astype(np.float32))
+    idx = pq_mod.build(x, m_subspaces=4, ksub=32, ncoarse=8)
+    _assert_same(idx.search(q, 10), idx.search(q, 10, use_pallas=True))
+
+
+def test_engine_parity_with_delta(data):
+    """Full serving path incl. the batched delta merge, kernels on vs off."""
+    corpus, q, fq = data
+    spec = corpus.spec
+    r = np.random.default_rng(0)
+    nv = r.normal(size=(20, spec.d)).astype(np.float32)
+    nf = corpus.filters[:20].copy()
+    outs = []
+    for use_pallas in (False, True):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, use_pallas=use_pallas)
+        idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                    cfg)
+        eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                           compact_threshold=64))
+        eng.insert(nv, nf)
+        assert eng.delta_size() == 20
+        outs.append(eng.search(np.asarray(q), np.asarray(fq)))
+    _assert_same(outs[0], outs[1])
+
+
+def test_engine_delta_surfaces_inserted_rows(data):
+    """A query identical to an inserted row must retrieve it from the delta
+    through the batched merge path (exercises merge_topk + combined_score)."""
+    corpus, _, _ = data
+    spec = corpus.spec
+    r = np.random.default_rng(1)
+    nv = r.normal(size=(8, spec.d)).astype(np.float32)
+    nf = corpus.filters[:8].copy()
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, use_pallas=True)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                       compact_threshold=64))
+    base = eng.index.size
+    eng.insert(nv, nf)
+    _, ids = eng.search(nv[:3], nf[:3])
+    assert (ids >= base).any()

@@ -11,6 +11,7 @@ from repro.configs import get_config, reduced
 from repro.checkpoint import ckpt
 from repro.data.tokens import MarkovTokens, TokenSpec
 from repro.distributed import fault
+from repro.launch.mesh import make_mesh
 from repro.models import model as M
 from repro.train import loop as train_loop
 from repro.train import optimizer as opt
@@ -102,8 +103,7 @@ def test_checkpoint_elastic_restore_resharded(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     ckpt.save(str(tmp_path), 3, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     out, _, _ = ckpt.restore(str(tmp_path), tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
