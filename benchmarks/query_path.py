@@ -1,17 +1,24 @@
 """End-to-end query-path benchmark: FCVIEngine.search throughput.
 
-The repo's first perf-trajectory artifact. Times the serving engine on the
-flat and IVF backends, with and without the Pallas kernels, at batch sizes
-64 and 256, against a live delta buffer (the production steady state:
-inserts pending, compaction not yet triggered). Also times a faithful
-re-implementation of the pre-batching per-query engine loop (per-query cache
-keys + per-query numpy delta merge) as the ``legacy`` baseline, so the
-speedup of the loop-free path is measured on the same host and corpus.
+The repo's perf-trajectory artifact. Times the serving engine — whose
+per-batch hot path is one jax.jit-compiled step — on the flat, IVF and PQ
+backends, with and without the Pallas kernels, fp32 and bf16 corpus storage,
+at batch sizes 64 and 256, against a live delta buffer (the production
+steady state: inserts pending, compaction not yet triggered). Also times a
+faithful re-implementation of the pre-batching per-query engine loop
+(per-query cache keys + per-query numpy delta merge) as the ``legacy``
+baseline, so the speedup of the loop-free path is measured on the same host
+and corpus.
 
 Writes BENCH_query_path.json next to this file:
 
-  {"results": [{backend, use_pallas, batch, qps, ms_per_query}, ...],
-   "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...}
+  {"results": [{backend, use_pallas, storage_dtype, batch, qps,
+                ms_per_query}, ...],
+   "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...,
+   "speedup_batch64_flat_vs_pr1_jnp": ...}
+
+NOTE: off-TPU hosts run the Pallas kernels in interpret mode, so
+``use_pallas=true`` rows measure dispatch correctness, not TPU performance.
 
 Usage: PYTHONPATH=src python benchmarks/query_path.py [--n 8192] [--quick]
 """
@@ -29,6 +36,9 @@ import numpy as np
 from repro.core import FCVIConfig, build, fcvi
 from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
 from repro.serve.engine import EngineConfig, FCVIEngine
+
+# batch-64 flat jnp engine throughput recorded in PR 1 (pre-jitted step)
+PR1_FLAT64_QPS = 1135.0
 
 
 def legacy_search(engine: FCVIEngine, queries: np.ndarray,
@@ -92,9 +102,10 @@ def legacy_search(engine: FCVIEngine, queries: np.ndarray,
 
 
 def make_engine(corpus, backend: str, use_pallas: bool, batch: int,
-                n_delta: int) -> FCVIEngine:
+                n_delta: int, storage_dtype: str = "float32") -> FCVIEngine:
     cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
-                     nlist=64, nprobe=8, use_pallas=use_pallas)
+                     nlist=64, nprobe=8, pq_ksub=64, pq_coarse=16,
+                     use_pallas=use_pallas, storage_dtype=storage_dtype)
     idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
     eng = FCVIEngine(idx, EngineConfig(k=10, batch_size=batch,
                                        compact_threshold=4 * n_delta))
@@ -123,32 +134,48 @@ def main():
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="flat backend, batch 64 only")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_query_path.json "
+                    "next to this script; CI smoke runs point this at a "
+                    "scratch path so the committed artifact keeps the full-"
+                    "config numbers)")
     args = ap.parse_args()
 
     spec = CorpusSpec(n=args.n, d=args.d, n_categories=6, n_numeric=2, seed=0)
     corpus = make_corpus(spec)
 
-    combos = [("flat", False, 64)]
+    # (backend, use_pallas, batch, storage_dtype)
+    combos = [("flat", False, 64, "float32"),
+              ("flat", True, 64, "float32"),
+              ("flat", False, 64, "bfloat16")]
     if not args.quick:
-        combos += [("flat", True, 64), ("flat", False, 256),
-                   ("flat", True, 256), ("ivf", False, 64), ("ivf", True, 64),
-                   ("ivf", False, 256), ("ivf", True, 256)]
+        combos += [("flat", False, 256, "float32"),
+                   ("flat", True, 256, "float32"),
+                   ("flat", True, 64, "bfloat16"),
+                   ("ivf", False, 64, "float32"), ("ivf", True, 64, "float32"),
+                   ("ivf", False, 256, "float32"),
+                   ("ivf", True, 256, "float32"),
+                   ("ivf", False, 64, "bfloat16"),
+                   ("pq", False, 64, "float32"), ("pq", True, 64, "float32")]
 
     results = []
-    for backend, use_pallas, batch in combos:
+    for backend, use_pallas, batch, storage_dtype in combos:
         q, fq = sample_queries(corpus, batch, seed=1)
         q, fq = np.asarray(q), np.asarray(fq)
-        eng = make_engine(corpus, backend, use_pallas, batch, args.n_delta)
+        eng = make_engine(corpus, backend, use_pallas, batch, args.n_delta,
+                          storage_dtype)
 
         def run(queries, filters, eng=eng):
             eng._cache.clear()                 # measure compute, not cache
             return eng.search(queries, filters)
 
         t = time_search(run, q, fq, args.iters)
-        row = dict(backend=backend, use_pallas=use_pallas, batch=batch,
+        row = dict(backend=backend, use_pallas=use_pallas,
+                   storage_dtype=storage_dtype, batch=batch,
                    qps=batch / t, ms_per_query=1e3 * t / batch)
         results.append(row)
-        print(f"{backend:4s} pallas={int(use_pallas)} batch={batch:3d} "
+        print(f"{backend:4s} pallas={int(use_pallas)} "
+              f"st={storage_dtype:8s} batch={batch:3d} "
               f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q")
 
     # legacy per-query loop baseline (jnp kernels off, flat, batch 64)
@@ -168,18 +195,31 @@ def main():
 
     new64 = next(r for r in results
                  if r["backend"] == "flat" and not r["use_pallas"]
-                 and r["batch"] == 64)
+                 and r["batch"] == 64 and r["storage_dtype"] == "float32")
     out = dict(
-        config=dict(n=args.n, d=args.d, n_delta=args.n_delta, k=10,
-                    iters=args.iters),
+        config=dict(
+            n=args.n, d=args.d, n_delta=args.n_delta, k=10, iters=args.iters,
+            note=("use_pallas rows run the Pallas kernels in interpret mode "
+                  "on non-TPU hosts (dispatch correctness, not TPU perf); "
+                  "the engine batch step is one jax.jit-compiled function"),
+        ),
         results=results,
         legacy=legacy,
         speedup_batch64_flat_vs_legacy=new64["qps"] / legacy["qps"],
     )
-    path = pathlib.Path(__file__).parent / "BENCH_query_path.json"
+    if args.n == 8192 and args.d == 64 and args.n_delta == 512:
+        # PR-1 recorded 1135 qps for this exact flat/jnp/batch-64 config
+        # before the engine step was fused into a single jitted function;
+        # the ratio is only meaningful for the same corpus shape
+        out["speedup_batch64_flat_vs_pr1_jnp"] = new64["qps"] / PR1_FLAT64_QPS
+    path = (pathlib.Path(args.out) if args.out
+            else pathlib.Path(__file__).parent / "BENCH_query_path.json")
     path.write_text(json.dumps(out, indent=2))
+    vs_pr1 = out.get("speedup_batch64_flat_vs_pr1_jnp")
     print(f"speedup (batch-64 flat vs legacy loop): "
-          f"{out['speedup_batch64_flat_vs_legacy']:.2f}x -> {path}")
+          f"{out['speedup_batch64_flat_vs_legacy']:.2f}x"
+          + (f"; vs PR-1 jnp baseline: {vs_pr1:.2f}x" if vs_pr1 else "")
+          + f" -> {path}")
 
 
 if __name__ == "__main__":

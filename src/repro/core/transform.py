@@ -100,20 +100,23 @@ def psi_partition_inverse(v_t: Array, f: Array, alpha: float | Array) -> Array:
     return (vt + alpha * f[..., None, :]).reshape(*v_t.shape)
 
 
-def psi_cluster(v: Array, f: Array, alpha: float | Array, centers: Array) -> Array:
-    """Eq. 6: like Eq. 5 but subtract the nearest k-means center of f.
-
-    centers: (n_clusters, m).
-    """
-    # nearest center by squared L2
+def nearest_center(f: Array, centers: Array) -> Array:
+    """Substitute each filter with its nearest k-means center (squared L2)."""
     d2 = (
         jnp.sum(f * f, axis=-1, keepdims=True)
         - 2.0 * f @ centers.T
         + jnp.sum(centers * centers, axis=-1)
     )
     assign = jnp.argmin(d2, axis=-1)
-    mu = centers[assign]
-    return psi_partition(v, mu, alpha)
+    return centers[assign]
+
+
+def psi_cluster(v: Array, f: Array, alpha: float | Array, centers: Array) -> Array:
+    """Eq. 6: like Eq. 5 but subtract the nearest k-means center of f.
+
+    centers: (n_clusters, m).
+    """
+    return psi_partition(v, nearest_center(f, centers), alpha)
 
 
 def psi_embedding(v: Array, f: Array, alpha: float | Array, w: Array) -> Array:
@@ -164,12 +167,64 @@ class Transform:
     def normalize(self, v: Array, f: Array) -> tuple[Array, Array]:
         return self.vec_norm.apply(v), self.filt_norm.apply(f)
 
-    def apply(self, v: Array, f: Array) -> Array:
-        """Normalize then transform. v: (..., d), f: (..., m) -> (..., d)."""
-        vn, fn = self.normalize(v, f)
-        return self.apply_normalized(vn, fn)
+    def projection(self) -> Array:
+        """The (m, d) fold matrix P with psi(v, f, a) == v - a * (f @ P).
 
-    def apply_normalized(self, vn: Array, fn: Array) -> Array:
+        partition/cluster fold via the 0/1 tiling matrix (exact: each output
+        dim sums exactly one nonzero term); embedding folds via W^T. This is
+        what lets all three psi variants share the single fused kernel.
+        """
+        from repro.kernels.ref import partition_matrix
+
+        d = self.vec_norm.mean.shape[-1]
+        m = self.filt_norm.mean.shape[-1]
+        if self.mode == "embedding":
+            assert self.proj is not None
+            return self.proj.T
+        return partition_matrix(d, m, self.vec_norm.mean.dtype)
+
+    def _fused(self, v: Array, f: Array, vec_norm: "Normalizer",
+               filt_norm: "Normalizer") -> Array:
+        """One-kernel normalize+project+subtract over flattened rows."""
+        from repro.kernels import ops
+
+        d, m = v.shape[-1], f.shape[-1]
+        out = ops.fused_transform(
+            v.reshape(-1, d), f.reshape(-1, m), self.projection(), self.alpha,
+            vec_norm.mean, vec_norm.std, filt_norm.mean, filt_norm.std)
+        return out.reshape(*v.shape[:-1], d)
+
+    def apply(self, v: Array, f: Array, *, use_pallas: bool = False) -> Array:
+        """Normalize then transform. v: (..., d), f: (..., m) -> (..., d).
+
+        With ``use_pallas`` the whole chain — per-dim standardize of v and f,
+        filter fold, subtract — runs as ONE fused kernel instead of 4+ jnp
+        ops (cluster mode substitutes centers first, then fuses the rest).
+        """
+        if not use_pallas:
+            vn, fn = self.normalize(v, f)
+            return self.apply_normalized(vn, fn)
+        if self.mode == "cluster":
+            assert self.centers is not None
+            # center substitution is data-dependent, not affine: normalize
+            # the filter outside, substitute, feed the kernel an identity
+            # filter normalizer
+            mu = nearest_center(self.filt_norm.apply(f), self.centers)
+            return self._fused(v, mu, self.vec_norm,
+                               Normalizer.identity(mu.shape[-1], mu.dtype))
+        return self._fused(v, f, self.vec_norm, self.filt_norm)
+
+    def apply_normalized(self, vn: Array, fn: Array, *,
+                         use_pallas: bool = False) -> Array:
+        if use_pallas:
+            f_in = fn
+            if self.mode == "cluster":
+                assert self.centers is not None
+                f_in = nearest_center(fn, self.centers)
+            return self._fused(
+                vn, f_in,
+                Normalizer.identity(vn.shape[-1], vn.dtype),
+                Normalizer.identity(f_in.shape[-1], f_in.dtype))
         if self.mode == "partition":
             return psi_partition(vn, fn, self.alpha)
         if self.mode == "cluster":

@@ -14,6 +14,15 @@ Contract
 descending — higher is better, negative squared L2 for the exact backends —
 and ``ids``: (q, k) int32 corpus row ids. Rows that cannot be filled (fewer
 than ``k`` reachable candidates) carry ``-inf`` scores.
+
+Storage dtype: the flat/IVF backends accept a build-time ``storage_dtype``
+(threaded from ``FCVIConfig.storage_dtype``) and may hold the corpus at
+reduced precision (bf16). Scores are still fp32 — squared norms are fp32
+computed from the stored values and matmuls accumulate fp32 — so the
+contract above is unchanged; returned orderings are exact w.r.t. the stored
+rows. ``search`` must stay traceable under ``jax.jit`` with static ``k`` and
+``use_pallas``: the serving engine inlines it into its single jitted
+per-batch step.
 """
 from __future__ import annotations
 

@@ -35,7 +35,7 @@ Array = jax.Array
 @dataclasses.dataclass(frozen=True)
 class PQIndex:
     codebooks: Array       # (M, ksub, dsub) residual codebooks
-    codes: Array           # (n, M) int32 in [0, ksub)
+    codes: Array           # (n, M) in [0, ksub): uint8 when ksub <= 256
     coarse_centers: Array  # (ncoarse, d)
     coarse_ids: Array      # (n,) int32 in [0, ncoarse)
     cb_sq: Array           # (M, ksub) ||codebook||^2 (precomputed at build)
@@ -97,9 +97,13 @@ def build(vectors: Array, m_subspaces: int = 8, ksub: int = 256,
         codes.append(lbl)
     codebooks = jnp.stack(books)               # (M, ksub, dsub)
     centers_sub = coarse_centers.reshape(ncoarse, m_subspaces, dsub)
+    # the ADC sweep is memory-bound at ~bytes-per-code: ksub <= 256 fits
+    # uint8, quartering HBM traffic vs int32 codes (indices widen back to
+    # int32 at use sites, e.g. the combined (coarse, code) kernel index)
+    code_dtype = jnp.uint8 if ksub <= 256 else jnp.int32
     return PQIndex(
         codebooks=codebooks,
-        codes=jnp.stack(codes, axis=1).astype(jnp.int32),  # (n, M)
+        codes=jnp.stack(codes, axis=1).astype(code_dtype),  # (n, M)
         coarse_centers=coarse_centers,
         coarse_ids=coarse_ids.astype(jnp.int32),
         cb_sq=jnp.sum(codebooks * codebooks, axis=-1),

@@ -11,6 +11,14 @@ The batched variant runs a (batch, nprobe) grid: the probe dimension is the
 inner (sequential) axis, so each query's running top-k accumulates across its
 probes while the output block revisits the same (1, k) row. Only
 nprobe/nlist of the corpus is ever read per query.
+
+The dedup variant inverts the loop to probe-major: the grid walks the UNIQUE
+lists probed by any query in the batch, scoring the whole query batch against
+each slab with one MXU matmul and masking queries that did not probe it. A
+list shared by many queries is DMA'd from HBM exactly once per batch instead
+of once per (query, probe) pair — with batch 64 x nprobe 8 over nlist 64 the
+slab traffic drops up to 8x, which is the win that matters on the
+bandwidth-bound serving path.
 """
 from __future__ import annotations
 
@@ -91,6 +99,104 @@ def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k: int,
         interpret=interpret,
     )(probes, grouped, grouped_sq, valid, queries)
     return vals, idx
+
+
+def _dedup_kernel(uniq_ref, slab_ref, sq_ref, valid_ref, member_ref, q_ref,
+                  vals_ref, idx_ref, *, k: int, max_list: int):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    slab = slab_ref[...][0]            # (max_list, d)
+    sq = sq_ref[...][0]                # (max_list,)
+    ok = valid_ref[...][0]             # (max_list,) float 0/1
+    mem = member_ref[...][0]           # (b,) float 0/1: query probed this list
+    q = q_ref[...]                     # (b, d)
+
+    scores = 2.0 * jnp.dot(q, slab.T, preferred_element_type=jnp.float32)
+    scores = scores - sq[None, :]                       # (b, max_list)
+    keep = (ok > 0.5)[None, :] & (mem > 0.5)[:, None]
+    scores = jnp.where(keep, scores, NEG_INF)
+    list_id = uniq_ref[s]
+    gids = (list_id * max_list
+            + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
+                         k: int, *, interpret: bool = True):
+    """Probe-major batched slab search over the deduplicated probed lists.
+
+    grouped: (nlist, max_list, d); grouped_sq/valid: (nlist, max_list);
+    uniq: (s,) int32 unique probed list ids (tail slots may repeat a filler
+    id — they must have an all-zero ``member`` column); member: (s, b) float
+    0/1, 1 iff query b probed list uniq[s]; queries: (b, d).
+
+    Returns (vals (b, k), flat_ids (b, k)) in the same convention as
+    ``ivf_score_topk_batch``: scores 2<x,q> - ||x||^2, flat ids into
+    grouped.reshape(-1, d). Each unique slab is DMA'd once for the whole
+    batch (grid is sequential over slots, queries stay VMEM-resident).
+    """
+    nlist, max_list, d = grouped.shape
+    b = queries.shape[0]
+    slots = uniq.shape[0]
+    kernel = functools.partial(_dedup_kernel, k=k, max_list=max_list)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(slots,),
+        in_specs=[
+            pl.BlockSpec((1, max_list, d), lambda s, uniq: (uniq[s], 0, 0)),
+            pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0)),
+            pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0)),
+            pl.BlockSpec((1, b), lambda s, uniq: (s, 0)),
+            pl.BlockSpec((b, d), lambda s, uniq: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
+            pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
+        ),
+    )
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(uniq, grouped, grouped_sq, valid, member, queries)
+    return vals, idx
+
+
+def dedup_probes(probes, nlist: int):
+    """Compact a (b, nprobe) probe matrix into (uniq, member) for the
+    probe-major kernel: uniq (s,) int32 unique list ids (s = min(nlist,
+    b*nprobe), tail filled with 0 and masked), member (s, b) float 0/1.
+
+    Pure jnp with static shapes, so it traces into the jitted query step.
+    """
+    b, nprobe = probes.shape
+    slots = min(nlist, b * nprobe)
+    flat = jnp.sort(probes.reshape(-1).astype(jnp.int32))
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), flat[1:] != flat[:-1]])
+    pos = jnp.cumsum(is_new) - 1                      # slot of each element
+    uniq = jnp.zeros((slots,), jnp.int32).at[pos].set(flat, mode="drop")
+    n_uniq = pos[-1] + 1
+    slot_live = jnp.arange(slots) < n_uniq
+    member = (probes[None, :, :] == uniq[:, None, None]).any(-1)
+    member = member & slot_live[:, None]
+    return uniq, member.astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))

@@ -33,8 +33,10 @@ from repro.kernels import ref
 from repro.kernels.fcvi_transform import fused_transform as _fused_transform
 from repro.kernels.fused_score_topk import score_topk as _score_topk
 from repro.kernels.rescore import rescore as _rescore
-from repro.kernels.ivf_score import (ivf_score_topk as _ivf_score_topk,
-                                     ivf_score_topk_batch as _ivf_score_topk_batch)
+from repro.kernels.ivf_score import (dedup_probes,
+                                     ivf_score_topk as _ivf_score_topk,
+                                     ivf_score_topk_batch as _ivf_score_topk_batch,
+                                     ivf_score_topk_dedup as _ivf_score_topk_dedup)
 from repro.kernels.pq_lut import (pq_score as _pq_score,
                                   pq_score_batch as _pq_score_batch)
 
@@ -45,11 +47,22 @@ def _interpret() -> bool:
 
 def fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
                     *, use_pallas: bool = True, block_rows: int = 256):
+    """Fused normalize+project+subtract. Rows are zero-padded to the kernel's
+    block multiple and sliced back off, so any (n, d)/(n, m) shape works —
+    this is what lets the QUERY path (arbitrary batch sizes) dispatch here,
+    not just the offline corpus transform."""
     if not use_pallas:
         return ref.ref_fused_transform(v, f, proj, alpha, mean_v, std_v,
                                        mean_f, std_f)
-    return _fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
-                            block_rows=block_rows, interpret=_interpret())
+    n = v.shape[0]
+    br = min(block_rows, n)
+    pad = -n % br
+    if pad:
+        v = jnp.concatenate([v, jnp.zeros((pad, v.shape[1]), v.dtype)], axis=0)
+        f = jnp.concatenate([f, jnp.zeros((pad, f.shape[1]), f.dtype)], axis=0)
+    out = _fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
+                           block_rows=br, interpret=_interpret())
+    return out[:n]
 
 
 def score_topk(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
@@ -58,6 +71,34 @@ def score_topk(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
         return ref.ref_score_topk(corpus, sq_norms, queries, k)
     return _score_topk(corpus, sq_norms, queries, k, block_rows=block_rows,
                        block_q=block_q, interpret=_interpret())
+
+
+def score_topk_padded(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
+                      block_rows: int = 128, block_q: int = 64):
+    """``score_topk`` for arbitrary shapes: zero-pads corpus rows (with +inf
+    squared norms, so pad rows score -inf and never surface) and queries to
+    the kernel's tile multiples, then slices the padding back off. This is
+    the dispatch used by flat candidate generation AND the IVF coarse
+    quantizer (centroid scoring is just a small score_topk)."""
+    if not use_pallas:
+        return ref.ref_score_topk(corpus, sq_norms, queries, k)
+    n, d = corpus.shape
+    nq = queries.shape[0]
+    br = min(block_rows, n)
+    bq = min(block_q, nq)
+    n_pad = -n % br
+    q_pad = -nq % bq
+    if n_pad:
+        corpus = jnp.concatenate(
+            [corpus, jnp.zeros((n_pad, d), corpus.dtype)], axis=0)
+        sq_norms = jnp.concatenate(
+            [sq_norms, jnp.full((n_pad,), jnp.inf, sq_norms.dtype)])
+    if q_pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0)
+    vals, idx = _score_topk(corpus, sq_norms, queries, k, block_rows=br,
+                            block_q=bq, interpret=_interpret())
+    return vals[:nq], idx[:nq]
 
 
 def rescore(cand_v, cand_f, qn, fqn, lam, *, use_pallas: bool = True,
@@ -85,6 +126,19 @@ def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k, *,
                                             probes, queries, k)
     return _ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries,
                                  k, interpret=_interpret())
+
+
+def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries, k,
+                         *, use_pallas: bool = True):
+    """Probe-major deduplicated batched slab search: uniq (s,), member (s, b),
+    queries (b, d). Shared lists are DMA'd once per batch (see
+    ``ivf_score.dedup_probes`` for building uniq/member from a probe matrix).
+    """
+    if not use_pallas:
+        return ref.ref_ivf_score_topk_dedup(grouped, grouped_sq, valid > 0.5,
+                                            uniq, member > 0.5, queries, k)
+    return _ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member,
+                                 queries, k, interpret=_interpret())
 
 
 def pq_score(codes, lut, *, use_pallas: bool = True, block_rows: int = 512):

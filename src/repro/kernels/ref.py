@@ -99,6 +99,28 @@ def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
     return jax.vmap(one)(probes, queries)
 
 
+def ref_ivf_score_topk_dedup(grouped: Array, grouped_sq: Array, valid: Array,
+                             uniq: Array, member: Array, queries: Array,
+                             k: int):
+    """Probe-major deduplicated slab scoring (the dedup kernel's oracle).
+
+    uniq: (s,) unique probed list ids; member: (s, b) bool — query b probed
+    list uniq[s]. Same score/id convention as ``ref_ivf_score_topk_batch``.
+    """
+    max_list = grouped.shape[1]
+    slabs = grouped[uniq]                              # (s, max_list, d)
+    sq = grouped_sq[uniq]
+    ok = valid[uniq]
+    s = 2.0 * jnp.einsum("bd,smd->bsm", queries, slabs) - sq[None]
+    keep = ok[None, :, :] & member.T[:, :, None]       # (b, s, max_list)
+    s = jnp.where(keep, s, -jnp.inf)
+    flat_ids = (uniq[:, None] * max_list
+                + jnp.arange(max_list)[None, :]).reshape(-1)
+    vals, pos = jax.lax.top_k(s.reshape(s.shape[0], -1), k)
+    ids = flat_ids[pos]
+    return vals, jnp.where(jnp.isneginf(vals), 0, ids)
+
+
 def ref_pq_score_batch(codes: Array, luts: Array) -> Array:
     """Multi-query ADC: codes (n, M), luts (q, M, ksub) -> scores (q, n)."""
     return jax.vmap(lambda lut: ref_pq_score(codes, lut))(luts)

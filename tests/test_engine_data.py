@@ -54,6 +54,48 @@ def test_engine_insert_delta_and_compaction(engine):
     assert eng.stats.compactions >= 1
 
 
+def test_engine_batch_step_does_not_retrace():
+    """The jitted engine step must trace once per (padded shape, delta
+    config); steady-state batches of the same shape may not recompile."""
+    from repro.serve import engine as engine_mod
+
+    spec = CorpusSpec(n=1500, d=32, n_categories=6, n_numeric=2, seed=8)
+    corpus = make_corpus(spec)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0))
+    # escalate_margin=1e9 forces the escalation stage every batch, so BOTH
+    # traces (stage 1 + stage 2) happen at warmup and any later compile is a
+    # genuine retracing regression
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                       compact_threshold=512,
+                                       escalate_margin=1e9))
+    r = np.random.default_rng(4)
+    eng.insert(r.normal(size=(16, spec.d)).astype(np.float32),
+               corpus.filters[:16].copy())
+    q, fq = sample_queries(corpus, 16, seed=9)
+    eng.search(q, fq)                      # warmup: traces both stages
+    warm = engine_mod.trace_count()
+    for seed in (10, 11, 12):
+        q, fq = sample_queries(corpus, 16, seed=seed)
+        eng._cache.clear()
+        eng.search(q, fq)
+    assert engine_mod.trace_count() == warm, (
+        "engine batch step retraced on a steady-state batch")
+
+
+def test_engine_config_default_not_shared():
+    """Regression: the default EngineConfig must be constructed per engine,
+    not shared mutable state across engines."""
+    spec = CorpusSpec(n=200, d=16, n_categories=6, n_numeric=2, seed=3)
+    corpus = make_corpus(spec)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(alpha=1.0, lam=0.6))
+    a, b = FCVIEngine(idx), FCVIEngine(idx)
+    assert a.cfg is not b.cfg
+    a.cfg.k = 3
+    assert b.cfg.k != 3
+
+
 def test_engine_predicate_multiprobe(engine):
     corpus, eng = engine
     spec = corpus.spec

@@ -95,6 +95,49 @@ def test_ivf_score_topk_batch(b, nlist, maxl, d, nprobe, k):
     assert (np.asarray(i1) == np.asarray(i2)).all()
 
 
+@pytest.mark.parametrize("b,nlist,maxl,d,nprobe,k",
+                         [(4, 8, 64, 64, 3, 8), (6, 16, 128, 32, 5, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ivf_score_topk_dedup(b, nlist, maxl, d, nprobe, k, dtype):
+    """Probe-major dedup kernel vs its oracle AND the per-probe batch kernel:
+    deduplicating shared slabs must not change any result."""
+    from repro.kernels.ivf_score import dedup_probes
+
+    r = np.random.default_rng(b + nlist)
+    grouped = _rand(r, (nlist, maxl, d), dtype)
+    gsq = jnp.sum(grouped.astype(jnp.float32) ** 2, -1)
+    valid = jnp.asarray((r.random((nlist, maxl)) > 0.15).astype(np.float32))
+    probes = jnp.asarray(np.stack(
+        [r.choice(nlist, nprobe, replace=False) for _ in range(b)]
+    ).astype(np.int32))
+    qs = _rand(r, (b, d), jnp.float32)
+    uniq, member = dedup_probes(probes, nlist)
+    assert uniq.shape[0] == min(nlist, b * nprobe)
+    v1, i1 = ops.ivf_score_topk_dedup(grouped, gsq, valid, uniq, member, qs, k)
+    v2, i2 = ops.ivf_score_topk_dedup(grouped, gsq, valid, uniq, member, qs, k,
+                                      use_pallas=False)
+    vb, ib = ops.ivf_score_topk_batch(grouped, gsq, valid, probes, qs, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(vb),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(ib)).all()
+
+
+def test_score_topk_padded_arbitrary_shapes():
+    """Padded dispatch: corpus rows and query counts off the tile multiples."""
+    r = np.random.default_rng(3)
+    corpus = _rand(r, (100, 32), jnp.float32)
+    queries = _rand(r, (5, 32), jnp.float32)
+    sq = jnp.sum(corpus * corpus, -1)
+    v1, i1 = ops.score_topk_padded(corpus, sq, queries, 7)
+    v2, i2 = ref.ref_score_topk(corpus, sq, queries, 7)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
 @pytest.mark.parametrize("n,M,ksub,q", [(500, 4, 32, 3), (512, 8, 64, 5)])
 def test_pq_score_batch(n, M, ksub, q):
     """Multi-query ADC kernel, incl. row counts that need padding."""

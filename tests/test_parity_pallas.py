@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import FCVIConfig, build, query, multi_probe_query
+from repro.core.transform import fit_transform
 from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
 from repro.index import flat as flat_mod
 from repro.index import ivf as ivf_mod
@@ -89,6 +90,84 @@ def test_pq_backend_parity():
     q = jnp.asarray(r.normal(size=(3, 32)).astype(np.float32))
     idx = pq_mod.build(x, m_subspaces=4, ksub=32, ncoarse=8)
     _assert_same(idx.search(q, 10), idx.search(q, 10, use_pallas=True))
+
+
+@pytest.mark.parametrize("mode,n,d,m", [
+    ("partition", 300, 64, 4),   # 300 rows: pads to the kernel block multiple
+    ("partition", 37, 48, 3),
+    ("cluster", 200, 32, 4),
+    ("embedding", 128, 64, 8),
+])
+def test_transform_apply_parity(mode, n, d, m):
+    """Transform.apply/apply_normalized kernel dispatch vs the jnp path."""
+    r = np.random.default_rng(n + m)
+    v = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(n, m)).astype(np.float32))
+    kw = dict(n_clusters=4) if mode == "cluster" else {}
+    tfm = fit_transform(v, f, 1.5, mode, **kw)
+    np.testing.assert_allclose(
+        np.asarray(tfm.apply(v, f)),
+        np.asarray(tfm.apply(v, f, use_pallas=True)), rtol=2e-5, atol=2e-5)
+    vn, fn = tfm.normalize(v, f)
+    np.testing.assert_allclose(
+        np.asarray(tfm.apply_normalized(vn, fn)),
+        np.asarray(tfm.apply_normalized(vn, fn, use_pallas=True)),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_transform_apply_parity_non_divisible_dims():
+    """embedding mode with d % m != 0 (explicit proj) must dispatch too."""
+    r = np.random.default_rng(50)
+    v = jnp.asarray(r.normal(size=(10, 50)).astype(np.float32))
+    f = jnp.asarray(r.normal(size=(10, 3)).astype(np.float32))
+    proj = jnp.asarray(r.normal(size=(50, 3)).astype(np.float32))
+    tfm = fit_transform(v, f, 1.0, "embedding", proj=proj)
+    np.testing.assert_allclose(
+        np.asarray(tfm.apply(v, f)),
+        np.asarray(tfm.apply(v, f, use_pallas=True)), rtol=2e-5, atol=2e-5)
+    # leading batch axes flatten through the kernel and reshape back
+    v3, f3 = v.reshape(5, 2, 50), f.reshape(5, 2, 3)
+    out = tfm.apply(v3, f3, use_pallas=True)
+    assert out.shape == (5, 2, 50)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(tfm.apply(v3, f3)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_bf16_storage_matches_fp32_within_refine_guarantee(data, backend):
+    """bf16 corpus storage: candidate generation reads half-width rows, but
+    re-ranking runs on the fp32 normalized originals, so the returned top-k
+    must agree with the fp32-storage index (the exact-refine guarantee)."""
+    corpus, q, fq = data
+    kw = dict(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=16, nprobe=16)
+    i32 = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(**kw))
+    i16 = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(storage_dtype="bfloat16", **kw))
+    assert i16.backend.vectors.dtype == jnp.bfloat16
+    s32, id32 = query(i32, q, fq, 10)
+    s16, id16 = query(i16, q, fq, 10)
+    id32, id16 = np.asarray(id32), np.asarray(id16)
+    overlap = np.mean([
+        len(set(id32[i]) & set(id16[i])) / id32.shape[1]
+        for i in range(id32.shape[0])])
+    assert overlap >= 0.9
+    # where the same candidate surfaced, its combined score is computed on
+    # the fp32 normalized originals either way -> must match tightly
+    same = id32 == id16
+    np.testing.assert_allclose(np.asarray(s32)[same], np.asarray(s16)[same],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_bf16_storage_pallas_parity(data, backend):
+    """kernels on vs off must still be a pure perf knob under bf16 storage."""
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=16,
+                     nprobe=16, storage_dtype="bfloat16")
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    _assert_same(query(idx, q, fq, 7), query(_with_pallas(idx), q, fq, 7))
 
 
 def test_engine_parity_with_delta(data):
