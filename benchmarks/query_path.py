@@ -17,24 +17,59 @@ Writes BENCH_query_path.json next to this file:
    "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...,
    "speedup_batch64_flat_vs_pr1_jnp": ...}
 
-NOTE: off-TPU hosts run the Pallas kernels in interpret mode, so
-``use_pallas=true`` rows measure dispatch correctness, not TPU performance.
+``--host-devices N`` forces N host (CPU) devices BEFORE jax initialises and
+adds mesh-sharded engine rows (flat + IVF on a 1-device and an N-device
+mesh), exercising the shard_map batch step end to end. NOTE: off-TPU hosts
+run the Pallas kernels in interpret mode and host "devices" share the same
+cores, so ``use_pallas=true`` and ``sharded`` rows measure dispatch
+correctness and sharding overhead, not TPU performance.
 
 Usage: PYTHONPATH=src python benchmarks/query_path.py [--n 8192] [--quick]
+           [--host-devices 8]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import pathlib
+import sys
 import time
 
-import jax.numpy as jnp
 import numpy as np
+
+
+def _early_host_devices():
+    """XLA reads XLA_FLAGS at first jax init — must run before jax imports.
+
+    Handles both ``--host-devices N`` and ``--host-devices=N``; malformed
+    values fall through so argparse can report them properly.
+    """
+    n = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--host-devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif arg.startswith("--host-devices="):
+            n = arg.split("=", 1)[1]
+    try:
+        n = int(n) if n is not None else 0
+    except ValueError:
+        return
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
+
+
+_early_host_devices()
+
+import jax
+import jax.numpy as jnp
 
 from repro.core import FCVIConfig, build, fcvi
 from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.launch.mesh import make_mesh
 from repro.serve.engine import EngineConfig, FCVIEngine
 
 # batch-64 flat jnp engine throughput recorded in PR 1 (pre-jitted step)
@@ -102,13 +137,17 @@ def legacy_search(engine: FCVIEngine, queries: np.ndarray,
 
 
 def make_engine(corpus, backend: str, use_pallas: bool, batch: int,
-                n_delta: int, storage_dtype: str = "float32") -> FCVIEngine:
+                n_delta: int, storage_dtype: str = "float32",
+                mesh_devices: int = 0) -> FCVIEngine:
     cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
                      nlist=64, nprobe=8, pq_ksub=64, pq_coarse=16,
                      use_pallas=use_pallas, storage_dtype=storage_dtype)
     idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    mesh = (make_mesh((mesh_devices, 1), ("data", "model"))
+            if mesh_devices else None)
     eng = FCVIEngine(idx, EngineConfig(k=10, batch_size=batch,
-                                       compact_threshold=4 * n_delta))
+                                       compact_threshold=4 * n_delta),
+                     mesh=mesh)
     if n_delta:
         r = np.random.default_rng(99)
         eng.insert(r.normal(size=(n_delta, corpus.spec.d)).astype(np.float32),
@@ -134,6 +173,9 @@ def main():
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="flat backend, batch 64 only")
+    ap.add_argument("--host-devices", type=int, default=1,
+                    help="force N host devices (set before jax init) and add "
+                    "mesh-sharded engine rows on 1- and N-device meshes")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_query_path.json "
                     "next to this script; CI smoke runs point this at a "
@@ -144,26 +186,39 @@ def main():
     spec = CorpusSpec(n=args.n, d=args.d, n_categories=6, n_numeric=2, seed=0)
     corpus = make_corpus(spec)
 
-    # (backend, use_pallas, batch, storage_dtype)
-    combos = [("flat", False, 64, "float32"),
-              ("flat", True, 64, "float32"),
-              ("flat", False, 64, "bfloat16")]
+    # (backend, use_pallas, batch, storage_dtype, mesh_devices [0 = no mesh])
+    combos = [("flat", False, 64, "float32", 0),
+              ("flat", True, 64, "float32", 0),
+              ("flat", False, 64, "bfloat16", 0)]
     if not args.quick:
-        combos += [("flat", False, 256, "float32"),
-                   ("flat", True, 256, "float32"),
-                   ("flat", True, 64, "bfloat16"),
-                   ("ivf", False, 64, "float32"), ("ivf", True, 64, "float32"),
-                   ("ivf", False, 256, "float32"),
-                   ("ivf", True, 256, "float32"),
-                   ("ivf", False, 64, "bfloat16"),
-                   ("pq", False, 64, "float32"), ("pq", True, 64, "float32")]
+        combos += [("flat", False, 256, "float32", 0),
+                   ("flat", True, 256, "float32", 0),
+                   ("flat", True, 64, "bfloat16", 0),
+                   ("ivf", False, 64, "float32", 0),
+                   ("ivf", True, 64, "float32", 0),
+                   ("ivf", False, 256, "float32", 0),
+                   ("ivf", True, 256, "float32", 0),
+                   ("ivf", False, 64, "bfloat16", 0),
+                   ("pq", False, 64, "float32", 0),
+                   ("pq", True, 64, "float32", 0)]
+    ndev = min(args.host_devices, len(jax.devices()))
+    if ndev > 1:
+        # mesh-sharded engine rows: 1-device vs all-device mesh (host
+        # "devices" share cores off-TPU — dispatch/overhead check, not speed)
+        combos += [("flat", False, 64, "float32", 1),
+                   ("flat", False, 64, "float32", ndev)]
+        if not args.quick:
+            combos += [("ivf", False, 64, "float32", 1),
+                       ("ivf", False, 64, "float32", ndev),
+                       ("flat", True, 64, "float32", ndev),
+                       ("ivf", True, 64, "float32", ndev)]
 
     results = []
-    for backend, use_pallas, batch, storage_dtype in combos:
+    for backend, use_pallas, batch, storage_dtype, mesh_devices in combos:
         q, fq = sample_queries(corpus, batch, seed=1)
         q, fq = np.asarray(q), np.asarray(fq)
         eng = make_engine(corpus, backend, use_pallas, batch, args.n_delta,
-                          storage_dtype)
+                          storage_dtype, mesh_devices)
 
         def run(queries, filters, eng=eng):
             eng._cache.clear()                 # measure compute, not cache
@@ -172,10 +227,12 @@ def main():
         t = time_search(run, q, fq, args.iters)
         row = dict(backend=backend, use_pallas=use_pallas,
                    storage_dtype=storage_dtype, batch=batch,
+                   mesh_devices=mesh_devices,
                    qps=batch / t, ms_per_query=1e3 * t / batch)
         results.append(row)
         print(f"{backend:4s} pallas={int(use_pallas)} "
               f"st={storage_dtype:8s} batch={batch:3d} "
+              f"mesh={mesh_devices} "
               f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q")
 
     # legacy per-query loop baseline (jnp kernels off, flat, batch 64)
@@ -195,13 +252,18 @@ def main():
 
     new64 = next(r for r in results
                  if r["backend"] == "flat" and not r["use_pallas"]
-                 and r["batch"] == 64 and r["storage_dtype"] == "float32")
+                 and r["batch"] == 64 and r["storage_dtype"] == "float32"
+                 and r["mesh_devices"] == 0)
     out = dict(
         config=dict(
             n=args.n, d=args.d, n_delta=args.n_delta, k=10, iters=args.iters,
+            host_devices=ndev,
             note=("use_pallas rows run the Pallas kernels in interpret mode "
                   "on non-TPU hosts (dispatch correctness, not TPU perf); "
-                  "the engine batch step is one jax.jit-compiled function"),
+                  "the engine batch step is one jax.jit-compiled function; "
+                  "mesh_devices>0 rows run the shard_map sharded step — "
+                  "forced host devices share cores, so those rows measure "
+                  "sharding overhead, not scaling"),
         ),
         results=results,
         legacy=legacy,

@@ -107,6 +107,36 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def load(ckpt_dir: str, step: Optional[int] = None) -> tuple:
+    """Template-free restore: rebuild the NESTED DICT tree from the manifest.
+
+    The engine-facing entry point of the elastic lifecycle: callers that
+    saved a dict pytree (e.g. ``fcvi.index_state``) get it back as plain
+    nested dicts of HOST numpy arrays — replicated, ready to be re-laid-out
+    onto whatever mesh the restoring process has (``slab.shard`` /
+    ``ShardedServing`` do the device_put). Dtypes are restored from the
+    manifest (bf16/f8 round-trip through the uint view). Returns
+    (tree, step, metadata).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    tree: dict = {}
+    for key in manifest["keys"]:
+        arr = _from_storable(data[key], manifest["dtypes"][key])
+        node = tree
+        parts = key.split(SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree, step, manifest["metadata"]
+
+
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
             shardings: Any = None) -> tuple:
     """Restore into ``template``'s tree structure (shapes are validated).

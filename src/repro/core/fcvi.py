@@ -290,6 +290,95 @@ def recall_at_k(pred_ids: Array, true_ids: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Checkpointable state (build -> checkpoint -> restore -> serve lifecycle)
+# ---------------------------------------------------------------------------
+
+def index_state(index: FCVIIndex) -> dict:
+    """The checkpointable array state of an index, as a nested dict pytree.
+
+    Contains the fitted transform, the re-rank originals and the backend's
+    SOURCE arrays only — derived serving layouts (squared norms, the IVF
+    grouped slabs, the PQ build-time LUT terms) are rematerialised by
+    ``index_from_state``, so checkpoints stay roughly corpus-sized. Paired
+    with ``repro.checkpoint.ckpt``: ``ckpt.save(dir, step, index_state(ix))``
+    then ``index_from_state(cfg, ckpt.load(dir)[0])``.
+    """
+    tfm = index.transform
+    t = {"alpha": tfm.alpha,
+         "vec_mean": tfm.vec_norm.mean, "vec_std": tfm.vec_norm.std,
+         "filt_mean": tfm.filt_norm.mean, "filt_std": tfm.filt_norm.std}
+    if tfm.centers is not None:
+        t["centers"] = tfm.centers
+    if tfm.proj is not None:
+        t["proj"] = tfm.proj
+    cfg = index.config
+    b = index.backend
+    if cfg.backend == "flat":
+        bstate = {"vectors": b.vectors}
+    elif cfg.backend == "ivf":
+        bstate = {"vectors": b.vectors, "centroids": b.centroids,
+                  "lists": b.lists, "list_sizes": b.list_sizes}
+    else:
+        bstate = {"codebooks": b.codebooks, "codes": b.codes,
+                  "coarse_centers": b.coarse_centers,
+                  "coarse_ids": b.coarse_ids}
+    return {"transform": t, "backend": bstate,
+            "vectors_n": index.vectors_n, "filters_n": index.filters_n}
+
+
+def index_from_state(config: FCVIConfig, state: dict) -> FCVIIndex:
+    """Rebuild an ``FCVIIndex`` from ``index_state`` output (no re-training:
+    the fitted normalizers / k-means state come from the checkpoint; only the
+    derived serving layouts are rematerialised)."""
+    from repro.core.transform import Normalizer
+
+    t = state["transform"]
+    tfm = Transform(
+        mode=config.mode,
+        alpha=jnp.asarray(t["alpha"], jnp.float32),
+        vec_norm=Normalizer(mean=jnp.asarray(t["vec_mean"]),
+                            std=jnp.asarray(t["vec_std"])),
+        filt_norm=Normalizer(mean=jnp.asarray(t["filt_mean"]),
+                             std=jnp.asarray(t["filt_std"])),
+        centers=jnp.asarray(t["centers"]) if "centers" in t else None,
+        proj=jnp.asarray(t["proj"]) if "proj" in t else None,
+    )
+    b = state["backend"]
+    if config.backend == "flat":
+        vectors = jnp.asarray(b["vectors"])
+        backend = flat_mod.FlatIndex(
+            vectors=vectors,
+            sq_norms=jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1))
+    elif config.backend == "ivf":
+        from repro.index.slab import build_grouped
+
+        vectors = jnp.asarray(b["vectors"])
+        lists = jnp.asarray(b["lists"])
+        sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+        grouped, grouped_sq, valid = build_grouped(vectors, sq_norms, lists)
+        backend = ivf_mod.IVFIndex(
+            vectors=vectors, sq_norms=sq_norms,
+            centroids=jnp.asarray(b["centroids"]), lists=lists,
+            list_sizes=jnp.asarray(b["list_sizes"]),
+            grouped=grouped, grouped_sq=grouped_sq, valid=valid)
+    else:
+        codebooks = jnp.asarray(b["codebooks"])
+        coarse_centers = jnp.asarray(b["coarse_centers"])
+        ncoarse = coarse_centers.shape[0]
+        m, ksub, dsub = codebooks.shape
+        centers_sub = coarse_centers.reshape(ncoarse, m, dsub)
+        backend = pq_mod.PQIndex(
+            codebooks=codebooks, codes=jnp.asarray(b["codes"]),
+            coarse_centers=coarse_centers,
+            coarse_ids=jnp.asarray(b["coarse_ids"]),
+            cb_sq=jnp.sum(codebooks * codebooks, axis=-1),
+            coarse_dot=jnp.einsum("cmd,mkd->cmk", centers_sub, codebooks))
+    return FCVIIndex(config=config, transform=tfm, backend=backend,
+                     vectors_n=jnp.asarray(state["vectors_n"]),
+                     filters_n=jnp.asarray(state["filters_n"]))
+
+
+# ---------------------------------------------------------------------------
 # Updates: delta buffer + compaction (production insert path)
 # ---------------------------------------------------------------------------
 

@@ -36,7 +36,8 @@ DEFAULT_RULES = {
     "vocab": "model",
     "experts": "model",         # EP
     "rnn": "model",
-    "corpus": ("pod", "data"),  # FCVI corpus rows
+    "corpus": ("pod", "data"),  # FCVI corpus rows (flat slabs, rescore rows)
+    "ivf_lists": ("pod", "data"),  # FCVI IVF inverted lists (grouped slabs)
     "none": None,
 }
 

@@ -1,5 +1,5 @@
 """Vector index backends (TPU-native: tiled matmul / IVF / PQ) + distributed search."""
-from repro.index import flat, ivf, pq, distributed
+from repro.index import flat, ivf, pq, slab, distributed
 from repro.index.backend import SearchBackend
 
-__all__ = ["flat", "ivf", "pq", "distributed", "SearchBackend"]
+__all__ = ["flat", "ivf", "pq", "slab", "distributed", "SearchBackend"]

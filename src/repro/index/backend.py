@@ -23,6 +23,13 @@ contract above is unchanged; returned orderings are exact w.r.t. the stored
 rows. ``search`` must stay traceable under ``jax.jit`` with static ``k`` and
 ``use_pallas``: the serving engine inlines it into its single jitted
 per-batch step.
+
+Serving layout: backends that can serve mesh-sharded (flat, IVF) also expose
+``slab()`` returning their ``repro.index.slab`` layout view — the object the
+device-mesh serving layer shards (``slab.shard(mesh, rules)``) and the
+checkpoint layer rematerialises at restore time. ``slab()`` is deliberately
+NOT part of this protocol: PQ serves unsharded for now, and the engine
+falls back accordingly.
 """
 from __future__ import annotations
 

@@ -36,15 +36,42 @@ def _local_search(vectors: Array, sq_norms: Array, queries: Array, k: int,
     return vals, idx + row_offset
 
 
-def _merge_over_axis(vals: Array, idx: Array, axis: str, k: int):
-    """All-gather candidate sets over one mesh axis and reduce to top-k."""
-    g_vals = jax.lax.all_gather(vals, axis)  # (n_ax, q, k)
+def merge_over_axis(vals: Array, idx: Array, axis: str, k: int):
+    """All-gather candidate sets over one mesh axis and reduce to top-k.
+
+    The shard-aware merge stage: gathers the (n_ax, q, kl) candidate sets of
+    every shard along ``axis`` and runs ``flat.merge_topk`` over the pooled
+    columns (one concatenation + one top-k), so the merged output inherits
+    merge_topk's padding semantics (-inf fill when k exceeds the pool).
+    """
+    g_vals = jax.lax.all_gather(vals, axis)  # (n_ax, q, kl)
     g_idx = jax.lax.all_gather(idx, axis)
     n_ax = g_vals.shape[0]
     g_vals = jnp.moveaxis(g_vals, 0, -2).reshape(*vals.shape[:-1], n_ax * vals.shape[-1])
     g_idx = jnp.moveaxis(g_idx, 0, -2).reshape(*idx.shape[:-1], n_ax * idx.shape[-1])
-    top_vals, pos = jax.lax.top_k(g_vals, k)
-    return top_vals, jnp.take_along_axis(g_idx, pos, axis=-1)
+    empty_v = g_vals[..., :0]
+    empty_i = g_idx[..., :0]
+    return flat_mod.merge_topk(g_vals, g_idx, empty_v, empty_i, k)
+
+
+# internal name kept for existing call sites
+_merge_over_axis = merge_over_axis
+
+
+def tree_merge_topk(vals: Array, idx: Array, axes: Sequence[str],
+                    sizes: Sequence[int], k: int):
+    """Hierarchical cross-shard top-k merge: one exact merge stage per mesh
+    axis (``sizes`` are the static mesh extents of ``axes``). Intermediate
+    stages keep min(k, pool) candidates, so the final (replicated) result
+    equals the global top-k over every shard's candidate set — the per-shard
+    sets only need to contain their local winners."""
+    for ax, n_ax in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
+        keep = min(k, n_ax * vals.shape[-1])
+        vals, idx = merge_over_axis(vals, idx, ax, keep)
+    if vals.shape[-1] < k:
+        vals, idx = flat_mod.merge_topk(vals, idx, vals[..., :0],
+                                        idx[..., :0], k)
+    return vals, idx
 
 
 def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,

@@ -68,6 +68,13 @@ class FlatIndex:
         """SearchBackend protocol entry point."""
         return search(self, queries, k, use_pallas=use_pallas, **opts)
 
+    def slab(self):
+        """The serving-layout view of this index (see ``repro.index.slab``):
+        what the mesh-sharding and checkpoint layers consume."""
+        from repro.index.slab import FlatSlab
+
+        return FlatSlab(vectors=self.vectors, sq_norms=self.sq_norms)
+
 
 def build(vectors: Array, storage_dtype=None) -> FlatIndex:
     """``storage_dtype`` (e.g. bfloat16) stores the corpus at reduced
@@ -83,9 +90,28 @@ def build(vectors: Array, storage_dtype=None) -> FlatIndex:
 
 
 def merge_topk(vals_a: Array, idx_a: Array, vals_b: Array, idx_b: Array, k: int):
-    """Merge two (..., >=k) score/index sets into the joint top-k (max-score)."""
+    """Merge two score/index candidate sets into the joint top-k (max-score).
+
+    The merge primitive shared by the blocked scan, the engine's delta merge,
+    and the cross-shard tree merge (``distributed.merge_over_axis``), so it
+    must stay total over shard-shaped inputs: candidate sets smaller than
+    ``k`` (the output is padded with ``-inf`` scores / id 0, matching the
+    backend convention for unfillable rows), all-padding inputs (``-inf``
+    rows simply lose the merge), and duplicate ids across the two sets (both
+    occurrences compete; callers that need set semantics dedup upstream, as
+    ``multi_probe_query`` does — the engine's shard/delta id spaces are
+    disjoint by construction).
+    """
     vals = jnp.concatenate([vals_a, vals_b], axis=-1)
     idxs = jnp.concatenate([idx_a, idx_b], axis=-1)
+    total = vals.shape[-1]
+    if k > total:
+        pad = k - total
+        vals = jnp.concatenate(
+            [vals, jnp.full((*vals.shape[:-1], pad), -jnp.inf, vals.dtype)],
+            axis=-1)
+        idxs = jnp.concatenate(
+            [idxs, jnp.zeros((*idxs.shape[:-1], pad), idxs.dtype)], axis=-1)
     top_vals, pos = jax.lax.top_k(vals, k)
     return top_vals, jnp.take_along_axis(idxs, pos, axis=-1)
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clustering import kmeans, assign
+from repro.index.slab import build_grouped
 from repro.kernels import ops
 
 Array = jax.Array
@@ -67,12 +68,18 @@ class IVFIndex:
         """SearchBackend protocol entry point."""
         return search(self, queries, k, use_pallas=use_pallas, **opts)
 
+    def slab(self):
+        """The serving-layout view of this index (see ``repro.index.slab``):
+        what the mesh-sharding and checkpoint layers consume."""
+        from repro.index.slab import IVFSlab
 
-def _grouped_slabs(vectors: Array, sq_norms: Array, lists: Array):
-    """Materialise the dense (nlist, max_list, d) serving slabs from ids."""
-    safe = jnp.maximum(lists, 0)
-    return (vectors[safe], sq_norms[safe],
-            (lists >= 0).astype(jnp.float32))
+        return IVFSlab(centroids=self.centroids, lists=self.lists,
+                       grouped=self.grouped, grouped_sq=self.grouped_sq,
+                       valid=self.valid)
+
+
+# serving-layout materialisation lives with the layout type in index.slab
+_grouped_slabs = build_grouped
 
 
 def build(vectors: Array, nlist: int, rng: Array | None = None,

@@ -111,7 +111,8 @@ def build(vectors: Array, m_subspaces: int = 8, ksub: int = 256,
     )
 
 
-def compute_luts(index: PQIndex, queries: Array) -> Array:
+def compute_luts(index: PQIndex, queries: Array, *,
+                 use_pallas: bool = False) -> Array:
     """(q, d) -> (q, ncoarse, M, ksub) squared-distance lookup tables.
 
     lut[qi, c, m, j] = || (q - coarse_c)_m - codebook[m, j] ||^2, i.e. the
@@ -119,12 +120,15 @@ def compute_luts(index: PQIndex, queries: Array) -> Array:
     as ||qres_m||^2 - 2 (q_m.cb_j - center_m.cb_j) + ||cb_j||^2 so the
     dominant q.cb cross term (one matmul over (q, d, ksub)) is ncoarse-free;
     only the cheap residual-norm term carries the coarse axis, and the
-    center.cb / ||cb||^2 terms are precomputed at build time.
+    center.cb / ||cb||^2 terms are precomputed at build time. With
+    ``use_pallas`` that cross term runs as the fused ``ops.pq_lut_qdot``
+    kernel (per-subspace codebook VMEM-resident, query blocks streamed).
     """
     q, d = queries.shape
     m, ksub, dsub = index.codebooks.shape
     qs = queries.reshape(q, m, dsub)
-    q_dot = jnp.einsum("qmd,mkd->qmk", qs, index.codebooks)   # (q, M, ksub)
+    q_dot = ops.pq_lut_qdot(qs, index.codebooks,
+                            use_pallas=use_pallas)            # (q, M, ksub)
     qres = queries[:, None, :] - index.coarse_centers[None, :, :]  # (q, C, d)
     qres_sq = jnp.sum(qres.reshape(q, index.ncoarse, m, dsub) ** 2,
                       axis=-1)                                # (q, C, M)
@@ -143,7 +147,8 @@ def search(index: PQIndex, queries: Array, k: int, *,
     """
     n = index.size
     m, ksub = index.n_subspaces, index.ksub
-    luts = compute_luts(index, queries)                  # (q, C, M, ksub)
+    luts = compute_luts(index, queries,
+                        use_pallas=use_pallas)           # (q, C, M, ksub)
     nq = luts.shape[0]
 
     if use_pallas:

@@ -1,0 +1,319 @@
+"""Serving-layout slabs + device-mesh sharding of the index storage layer.
+
+A *slab* is the dense, padded, DMA-friendly materialisation of an index's
+serving data — the thing the query hot path actually streams:
+
+  * ``FlatSlab``  — the (n, d) corpus matrix + squared norms (flat backend).
+  * ``IVFSlab``   — the grouped (nlist, max_list, d) inverted-list layout +
+    the coarse centroids (IVF backend).
+
+``build_grouped`` materialises the IVF grouped layout from the compact id
+lists (moved here from ``repro.index.ivf`` so the layout construction lives
+with the layout type).
+
+Each slab has a ``shard(mesh, rules)`` step producing its device-mesh
+counterpart:
+
+  * ``FlatSlab.shard``  — ROW-shards the corpus over the mesh axes that the
+    ``AxisRules`` "corpus" entry resolves to. ``placement="cluster"`` reuses
+    the filter-centric idea of ``index.distributed.cluster_sharded_layout``:
+    rows are permuted so whole psi-clusters land on single shards (the
+    transformed corpus clusters BY FILTER, so most filtered queries
+    concentrate on few shards); ``row_ids`` carries the slab-row -> corpus-id
+    map either way, with ``-1`` marking padding rows.
+  * ``IVFSlab.shard``   — LIST-shards the grouped layout ("ivf_lists" rule):
+    inverted lists ARE the psi-clusters of the transformed corpus, so whole
+    lists are greedily packed onto shards balanced by row count
+    (``balanced_list_layout``). Each shard additionally carries one sentinel
+    (all-invalid) list slot so non-local probes have a harmless local target.
+
+Padding conventions match the kernel dispatch layer (``repro.kernels.ops``):
+pad vectors are zero with ``+inf`` squared norms, so they score ``-inf`` on
+the matmul-expansion path and are mask-refinable on the exact path.
+
+The sharded slabs are plain host-side containers (NOT pytrees): they hold the
+``jax.device_put``-sharded arrays plus the static layout facts (local sizes,
+mesh axes) that the ``shard_map`` serving step closes over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Grouped-layout materialisation (the IVF serving layout)
+# ---------------------------------------------------------------------------
+
+def build_grouped(vectors: Array, sq_norms: Array, lists: Array):
+    """Materialise the dense (nlist, max_list, d) serving slabs from id lists.
+
+    ``lists`` is (nlist, max_list) int32 corpus ids with -1 padding. Returns
+    (grouped, grouped_sq, valid) with ``valid`` float 0/1 (1 = real row).
+    """
+    safe = jnp.maximum(lists, 0)
+    return (vectors[safe], sq_norms[safe],
+            (lists >= 0).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+def resolve_axes(mesh: Mesh, rules, name: str) -> Tuple[str, ...]:
+    """Mesh axes a logical axis name shards over, per the AxisRules entry."""
+    v = rules.rules.get(name)
+    if v is None:
+        return ()
+    axes = v if isinstance(v, tuple) else (v,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+def axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _put(mesh: Mesh, axes: Tuple[str, ...], x: Array) -> Array:
+    """Shard dim 0 of ``x`` over ``axes`` (replicated over other mesh axes)."""
+    return jax.device_put(x, NamedSharding(mesh, P(axes)))
+
+
+def pad_dim0(x: Array, to: int, value) -> Array:
+    pad = to - x.shape[0]
+    if pad <= 0:
+        return x
+    filler = jnp.full((pad, *x.shape[1:]), value, x.dtype)
+    return jnp.concatenate([x, filler], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Flat slab
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatSlab:
+    """The flat serving layout: corpus matrix + precomputed squared norms."""
+
+    vectors: Array   # (n, d)
+    sq_norms: Array  # (n,)
+
+    def tree_flatten(self):
+        return (self.vectors, self.sq_norms), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.vectors.shape[0]
+
+    def shard(self, mesh: Mesh, rules, *, placement: str = "contiguous",
+              centers: Optional[Array] = None,
+              rng: Optional[Array] = None) -> "ShardedFlatSlab":
+        """Row-shard this slab over the mesh axes of the "corpus" rule.
+
+        ``placement="contiguous"`` keeps corpus order (bit-compatible with the
+        single-device scan); ``"cluster"`` permutes rows so psi-clusters land
+        on single shards (filter-centric placement — the transformed corpus
+        clusters by filter value, so filtered traffic concentrates per shard).
+        """
+        axes = resolve_axes(mesh, rules, "corpus")
+        ns = axes_size(mesh, axes)
+        n = self.size
+        if placement == "cluster" and ns > 1:
+            from repro.core.clustering import kmeans
+            from repro.index.distributed import cluster_sharded_layout
+
+            v32 = self.vectors.astype(jnp.float32)
+            if centers is None:
+                if rng is None:
+                    rng = jax.random.PRNGKey(0)
+                centers, _ = kmeans(rng, v32, min(4 * ns, n), iters=5)
+            perm, _ = cluster_sharded_layout(v32, centers, ns)
+            # the greedy packer balances to exact equal shard loads only when
+            # ns divides n; fold any remainder back in corpus order
+            if perm.shape[0] < n:
+                rest = jnp.setdiff1d(jnp.arange(n), perm, size=n - perm.shape[0])
+                perm = jnp.concatenate([perm, rest])
+            row_ids = perm.astype(jnp.int32)
+        elif placement == "contiguous" or ns <= 1:
+            row_ids = jnp.arange(n, dtype=jnp.int32)
+        else:
+            raise ValueError(f"unknown placement {placement!r}")
+        n_pad = -n % ns
+        vec = pad_dim0(self.vectors[row_ids], n + n_pad, 0)
+        sq = pad_dim0(self.sq_norms[row_ids], n + n_pad, jnp.inf)
+        ids = pad_dim0(row_ids, n + n_pad, -1)
+        return ShardedFlatSlab(
+            vectors=_put(mesh, axes, vec),
+            sq_norms=_put(mesh, axes, sq),
+            row_ids=_put(mesh, axes, ids),
+            mesh=mesh, axes=axes, n_real=n,
+            n_local=(n + n_pad) // ns, placement=placement,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFlatSlab:
+    """Row-sharded flat slab (host-side container, not a pytree)."""
+
+    vectors: Array        # (n_pad, d) sharded P(axes); zero pad rows
+    sq_norms: Array       # (n_pad,) sharded; +inf pad rows
+    row_ids: Array        # (n_pad,) sharded int32 corpus ids; -1 pad rows
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    n_real: int
+    n_local: int          # rows per shard
+    placement: str
+
+    @property
+    def n_shards(self) -> int:
+        return axes_size(self.mesh, self.axes)
+
+
+# ---------------------------------------------------------------------------
+# IVF slab
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFSlab:
+    """The IVF serving layout: coarse centroids + grouped inverted lists."""
+
+    centroids: Array   # (nlist, d)
+    lists: Array       # (nlist, max_list) int32 corpus ids, -1 pad
+    grouped: Array     # (nlist, max_list, d)
+    grouped_sq: Array  # (nlist, max_list)
+    valid: Array       # (nlist, max_list) float 0/1
+
+    def tree_flatten(self):
+        return (self.centroids, self.lists, self.grouped, self.grouped_sq,
+                self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def nlist(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def max_list(self) -> int:
+        return self.lists.shape[1]
+
+    def shard(self, mesh: Mesh, rules, *, placement: str = "balanced",
+              list_sizes: Optional[Array] = None) -> "ShardedIVFSlab":
+        """List-shard the grouped layout over the "ivf_lists" rule axes.
+
+        Whole inverted lists (= psi-clusters of the transformed corpus) are
+        packed onto shards; ``placement="balanced"`` greedily packs largest
+        lists first onto the least-loaded shard (row-count balance, the
+        filter-centric analogue of ``cluster_sharded_layout``);
+        ``"contiguous"`` blocks list ids in order. Each shard's local block
+        carries ``lists_per_shard + 1`` slots — the last is an all-invalid
+        sentinel that non-local probes are routed to.
+        """
+        axes = resolve_axes(mesh, rules, "ivf_lists")
+        ns = axes_size(mesh, axes)
+        nlist, max_list = self.lists.shape
+        lp = -(-nlist // ns)              # real list slots per shard
+        lpp = lp + 1                      # + sentinel slot
+        if list_sizes is None:
+            list_sizes = jnp.sum(self.valid > 0.5, axis=-1)
+        if placement == "balanced" and ns > 1:
+            shard_of, slot_in_shard = balanced_list_layout(
+                np.asarray(list_sizes), ns, lp)
+        elif placement == "contiguous" or ns <= 1:
+            shard_of = np.arange(nlist) // lp
+            slot_in_shard = np.arange(nlist) % lp
+        else:
+            raise ValueError(f"unknown placement {placement!r}")
+        slot_of_list = (shard_of * lpp + slot_in_shard).astype(np.int32)
+
+        d = self.grouped.shape[-1]
+        grouped = jnp.zeros((ns * lpp, max_list, d), self.grouped.dtype)
+        grouped_sq = jnp.full((ns * lpp, max_list), jnp.inf,
+                              self.grouped_sq.dtype)
+        valid = jnp.zeros((ns * lpp, max_list), self.valid.dtype)
+        lists = jnp.full((ns * lpp, max_list), -1, self.lists.dtype)
+        slots = jnp.asarray(slot_of_list)
+        grouped = grouped.at[slots].set(self.grouped)
+        grouped_sq = grouped_sq.at[slots].set(self.grouped_sq)
+        valid = valid.at[slots].set(self.valid)
+        lists = lists.at[slots].set(self.lists)
+        return ShardedIVFSlab(
+            centroids=self.centroids,
+            c_sq=jnp.sum(self.centroids.astype(jnp.float32) ** 2, axis=-1),
+            slot_of_list=slots,
+            grouped=_put(mesh, axes, grouped),
+            grouped_sq=_put(mesh, axes, grouped_sq),
+            valid=_put(mesh, axes, valid),
+            lists=_put(mesh, axes, lists),
+            mesh=mesh, axes=axes, nlist=nlist, max_list=max_list,
+            lists_per_shard=lp, placement=placement,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIVFSlab:
+    """List-sharded IVF slab (host-side container, not a pytree)."""
+
+    centroids: Array      # (nlist, d) replicated
+    c_sq: Array           # (nlist,) replicated
+    slot_of_list: Array   # (nlist,) int32 replicated: storage row of list g
+    grouped: Array        # (ns*(lp+1), max_list, d) sharded P(axes)
+    grouped_sq: Array     # (ns*(lp+1), max_list) sharded; +inf on sentinels
+    valid: Array          # (ns*(lp+1), max_list) sharded; 0 on sentinels
+    lists: Array          # (ns*(lp+1), max_list) sharded; -1 on sentinels
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    nlist: int
+    max_list: int
+    lists_per_shard: int  # real slots per shard (local block adds 1 sentinel)
+    placement: str
+
+    @property
+    def n_shards(self) -> int:
+        return axes_size(self.mesh, self.axes)
+
+
+def balanced_list_layout(list_sizes: np.ndarray, n_shards: int,
+                         capacity: int):
+    """Greedy balanced packing of inverted lists onto shards.
+
+    Largest lists first onto the least-loaded shard that still has a free
+    slot (each shard holds at most ``capacity`` lists). The filter-centric
+    placement step for IVF: lists are whole psi-clusters, so a probe touches
+    exactly one shard. Returns (shard_of_list, slot_in_shard) int arrays.
+    """
+    sizes = np.asarray(list_sizes, np.int64)
+    nlist = sizes.shape[0]
+    if n_shards * capacity < nlist:
+        raise ValueError(
+            f"{n_shards} shards x {capacity} slots < {nlist} lists")
+    order = np.argsort(-sizes, kind="stable")
+    load = np.zeros(n_shards, np.int64)
+    used = np.zeros(n_shards, np.int64)
+    shard_of = np.zeros(nlist, np.int32)
+    slot_in = np.zeros(nlist, np.int32)
+    for g in order:
+        free = np.nonzero(used < capacity)[0]
+        s = free[np.argmin(load[free])]
+        shard_of[g] = s
+        slot_in[g] = used[s]
+        used[s] += 1
+        load[s] += sizes[g]
+    return shard_of, slot_in

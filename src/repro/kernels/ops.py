@@ -37,7 +37,8 @@ from repro.kernels.ivf_score import (dedup_probes,
                                      ivf_score_topk as _ivf_score_topk,
                                      ivf_score_topk_batch as _ivf_score_topk_batch,
                                      ivf_score_topk_dedup as _ivf_score_topk_dedup)
-from repro.kernels.pq_lut import (pq_score as _pq_score,
+from repro.kernels.pq_lut import (pq_lut_qdot as _pq_lut_qdot,
+                                  pq_score as _pq_score,
                                   pq_score_batch as _pq_score_batch)
 
 
@@ -155,3 +156,14 @@ def pq_score_batch(codes, luts, *, use_pallas: bool = True,
         return ref.ref_pq_score_batch(codes, luts)
     return _pq_score_batch(codes, luts, block_rows=block_rows,
                            interpret=_interpret())
+
+
+def pq_lut_qdot(queries_sub, codebooks, *, use_pallas: bool = True,
+                block_q: int = 128):
+    """PQ LUT construction's q.codebook cross term — the one matmul that
+    dominates ``repro.index.pq.compute_luts``: queries_sub (q, M, dsub) x
+    codebooks (M, ksub, dsub) -> (q, M, ksub)."""
+    if not use_pallas:
+        return ref.ref_pq_lut_qdot(queries_sub, codebooks)
+    return _pq_lut_qdot(queries_sub, codebooks, block_q=block_q,
+                        interpret=_interpret())

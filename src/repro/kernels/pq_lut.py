@@ -55,6 +55,51 @@ def pq_score(codes, lut, *, block_rows: int = DEF_BLOCK_ROWS,
     )(codes, lut)
 
 
+def _qdot_kernel(q_ref, cb_ref, out_ref):
+    q = q_ref[...][:, 0, :]            # (bq, dsub)
+    cb = cb_ref[...][0]                # (ksub, dsub)
+    out = jnp.dot(q, cb.T, preferred_element_type=jnp.float32)
+    out_ref[...] = out[:, None, :].astype(out_ref.dtype)
+
+
+DEF_QDOT_BLOCK_Q = 128
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def pq_lut_qdot(queries_sub, codebooks, *, block_q: int = DEF_QDOT_BLOCK_Q,
+                interpret: bool = True):
+    """The q . codebook cross term of PQ LUT construction as one fused matmul.
+
+    queries_sub: (q, M, dsub) queries split into subspaces; codebooks:
+    (M, ksub, dsub). Returns (q, M, ksub) with out[i, m, j] =
+    <queries_sub[i, m], codebooks[m, j]> — the dominant term of
+    ``repro.index.pq.compute_luts`` (the residual-norm and build-time terms
+    stay jnp). Grid is (query-block, subspace): each subspace's codebook
+    stays VMEM-resident while query blocks stream through the MXU. Queries
+    are zero-padded to the block multiple and sliced back off.
+    """
+    q, m, dsub = queries_sub.shape
+    ksub = codebooks.shape[1]
+    block_q = min(block_q, q)
+    pad = -q % block_q
+    if pad:
+        queries_sub = jnp.concatenate(
+            [queries_sub, jnp.zeros((pad, m, dsub), queries_sub.dtype)],
+            axis=0)
+    out = pl.pallas_call(
+        _qdot_kernel,
+        grid=((q + pad) // block_q, m),
+        in_specs=[
+            pl.BlockSpec((block_q, 1, dsub), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ksub, dsub), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, ksub), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((q + pad, m, ksub), jnp.float32),
+        interpret=interpret,
+    )(queries_sub, codebooks)
+    return out[:q]
+
+
 def _batch_kernel(codes_ref, lut_ref, out_ref, *, ksub: int):
     codes = codes_ref[...]            # (bn, M) int32
     lut = lut_ref[...][0]             # (M, ksub)

@@ -121,6 +121,12 @@ def ref_ivf_score_topk_dedup(grouped: Array, grouped_sq: Array, valid: Array,
     return vals, jnp.where(jnp.isneginf(vals), 0, ids)
 
 
+def ref_pq_lut_qdot(queries_sub: Array, codebooks: Array) -> Array:
+    """PQ LUT q.codebook cross term: (q, M, dsub) x (M, ksub, dsub) ->
+    (q, M, ksub), out[i, m, j] = <queries_sub[i, m], codebooks[m, j]>."""
+    return jnp.einsum("qmd,mkd->qmk", queries_sub, codebooks)
+
+
 def ref_pq_score_batch(codes: Array, luts: Array) -> Array:
     """Multi-query ADC: codes (n, M), luts (q, M, ksub) -> scores (q, n)."""
     return jax.vmap(lambda lut: ref_pq_score(codes, lut))(luts)

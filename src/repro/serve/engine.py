@@ -22,6 +22,22 @@ compile counter so tests can pin down per-batch retracing regressions.
 When ``FCVIConfig.use_pallas`` is set on the wrapped index, everything inside
 the step — the fused query transform, candidate generation, re-scoring, and
 the delta merge — runs through the Pallas kernels in ``repro.kernels.ops``.
+
+Mesh-sharded serving: constructing the engine with a ``jax.sharding.Mesh``
+(``FCVIEngine(index, cfg, mesh=mesh)``) shards the serving state over the
+device mesh and replaces the batch step with the ``shard_map`` step from
+``repro.serve.sharded`` — flat slabs row-sharded, IVF slabs list-sharded,
+the delta buffer row-sharded, candidates tree-merged per mesh axis. Results
+are IDENTICAL to the single-device step for any mesh shape (a 1-device mesh
+is the trivial case); ``mesh=None`` (the default) keeps the single-device
+``_batch_step``.
+
+Lifecycle: ``engine.save(ckpt_dir)`` checkpoints the full serving state
+(transform + backend slab source arrays + re-rank originals + pending delta
+rows) through ``repro.checkpoint.ckpt``; ``FCVIEngine.restore(ckpt_dir,
+mesh=...)`` rebuilds an engine on ANY target mesh — arrays are loaded
+replicated on host and re-laid-out by the sharding step, which is the
+elastic-restart path (build on 8 devices, restore and serve on 2).
 """
 from __future__ import annotations
 
@@ -35,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt as ckpt_mod
 from repro.core import fcvi, theory
 from repro.core.baselines import BoxPredicate
 from repro.core.fcvi import FCVIConfig, FCVIIndex
@@ -125,7 +142,8 @@ class _DeltaBuffer:
 
 
 class FCVIEngine:
-    def __init__(self, index: FCVIIndex, config: Optional[EngineConfig] = None):
+    def __init__(self, index: FCVIIndex, config: Optional[EngineConfig] = None,
+                 *, mesh=None, rules=None, placement: str = "contiguous"):
         self.index = index
         # default constructed per engine: a shared EngineConfig() default
         # instance would leak mutations across engines
@@ -135,6 +153,20 @@ class FCVIEngine:
         self._delta_v: list = []
         self._delta_f: list = []
         self._delta: Optional[_DeltaBuffer] = None
+        self._mesh, self._rules, self._placement = mesh, rules, placement
+        self._sharded = None
+        self._sharded_delta = None
+        if mesh is not None:
+            self._build_sharded()
+
+    def _build_sharded(self):
+        """(Re)shard the serving state onto the configured mesh."""
+        from repro.serve.sharded import ShardedServing
+
+        self._sharded = ShardedServing(self.index, self._mesh,
+                                       rules=self._rules,
+                                       placement=self._placement)
+        self._sharded_delta = None
 
     # -- cache ------------------------------------------------------------
     def _cache_keys(self, queries: np.ndarray,
@@ -218,8 +250,8 @@ class FCVIEngine:
             kdp = theory.k_prime(k, cfg.lam, alpha, nd, cfg.c)
             kd = min(nd, max(kdp, 4 * k))
             dvn, dfn, dflat = delta.vn, delta.fn, delta.flat
-        scores, ids, margin = _batch_step(self.index, dvn, dfn, dflat, q, f,
-                                          k=k, kp=kp, kd=kd)
+        scores, ids, margin = self._step(dvn, dfn, dflat, q, f,
+                                         k=k, kp=kp, kd=kd)
         need = np.asarray(margin < self.cfg.escalate_margin)
         if n_real is not None:
             need = need[:n_real]
@@ -234,12 +266,25 @@ class FCVIEngine:
             sel = np.zeros((nb,), np.int64)
             sel[: len(idxs)] = idxs            # pad slots recompute query 0
             sel_j = jnp.asarray(sel)
-            s2, i2, _ = _batch_step(self.index, dvn, dfn, dflat,
-                                    q[sel_j], f[sel_j], k=k, kp=kp2, kd=kd)
+            s2, i2, _ = self._step(dvn, dfn, dflat,
+                                   q[sel_j], f[sel_j], k=k, kp=kp2, kd=kd)
             take = jnp.asarray(idxs)
             scores = scores.at[take].set(s2[: len(idxs)])
             ids = ids.at[take].set(i2[: len(idxs)])
         return scores, ids
+
+    def _step(self, dvn, dfn, dflat, q, f, *, k: int, kp: int, kd: int):
+        """Dispatch one padded batch to the single-device jitted step or the
+        mesh-sharded shard_map step (identical results by construction)."""
+        if self._sharded is None:
+            return _batch_step(self.index, dvn, dfn, dflat, q, f,
+                               k=k, kp=kp, kd=kd)
+        sdelta = None
+        if dflat is not None:
+            if self._sharded_delta is None:
+                self._sharded_delta = self._sharded.shard_delta(self._delta)
+            sdelta = self._sharded_delta
+        return self._sharded.step(sdelta, q, f, k=k, kp=kp, kd=kd)
 
     def _staged_query(self, q, f, k):
         """Pre-jit two-stage query WITHOUT the delta merge — kept as the
@@ -275,6 +320,7 @@ class FCVIEngine:
         self.stats.inserts += len(vectors)
         self._cache.clear()  # results may change
         self._delta = None   # invalidate; rebuilt lazily on the next search
+        self._sharded_delta = None
         if sum(len(v) for v in self._delta_v) >= self.cfg.compact_threshold:
             self.compact()
 
@@ -303,4 +349,57 @@ class FCVIEngine:
         self.index = fcvi.extend(self.index, jnp.asarray(v), jnp.asarray(f))
         self._delta_v, self._delta_f = [], []
         self._delta = None
+        self._sharded_delta = None
+        if self._sharded is not None:
+            self._build_sharded()   # re-shard the grown slabs onto the mesh
         self.stats.compactions += 1
+
+    # -- checkpoint lifecycle ---------------------------------------------
+    def save(self, ckpt_dir: str, step: int = 0, keep: int = 3) -> str:
+        """Checkpoint the full serving state (build -> checkpoint -> restore
+        -> serve lifecycle).
+
+        Saves the transform + backend source arrays + re-rank originals via
+        ``fcvi.index_state`` (derived serving slabs are rebuilt at restore
+        time by the slab layer) plus any PENDING delta rows, with the static
+        configs in the manifest metadata. Sharded arrays are gathered to host
+        transparently by the checkpoint writer.
+        """
+        d = self.index.transform.vec_norm.mean.shape[-1]
+        m = self.index.transform.filt_norm.mean.shape[-1]
+        dv = (np.concatenate(self._delta_v) if self._delta_v
+              else np.zeros((0, d), np.float32))
+        df = (np.concatenate(self._delta_f) if self._delta_f
+              else np.zeros((0, m), np.float32))
+        tree = {"index": fcvi.index_state(self.index),
+                "delta_v": dv, "delta_f": df}
+        metadata = {
+            "fcvi_config": dataclasses.asdict(self.index.config),
+            "engine_config": dataclasses.asdict(self.cfg),
+        }
+        return ckpt_mod.save(ckpt_dir, step, tree, metadata=metadata,
+                             keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, *, step: Optional[int] = None,
+                config: Optional[EngineConfig] = None, mesh=None, rules=None,
+                placement: str = "contiguous") -> "FCVIEngine":
+        """Restore an engine from a checkpoint onto ANY target mesh.
+
+        The elastic-restart path: arrays come back replicated on host, the
+        index is rebuilt without re-training (k-means state is part of the
+        checkpoint), and — when ``mesh`` is given — the slab layer re-lays
+        the serving state out over the TARGET mesh, which may have a
+        different shape than the mesh the checkpoint was written from.
+        """
+        tree, _, metadata = ckpt_mod.load(ckpt_dir, step=step)
+        fcfg = FCVIConfig(**metadata["fcvi_config"])
+        index = fcvi.index_from_state(fcfg, tree["index"])
+        ecfg = (config if config is not None
+                else EngineConfig(**metadata["engine_config"]))
+        eng = cls(index, ecfg, mesh=mesh, rules=rules, placement=placement)
+        if tree["delta_v"].shape[0]:
+            eng._delta_v = [np.asarray(tree["delta_v"], np.float32)]
+            eng._delta_f = [np.asarray(tree["delta_f"], np.float32)]
+            eng.stats.inserts = int(tree["delta_v"].shape[0])
+        return eng

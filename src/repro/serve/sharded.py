@@ -1,0 +1,325 @@
+"""Mesh-sharded serving: the engine batch step as a ``shard_map`` body.
+
+``ShardedServing`` is the device-mesh counterpart of the single-device
+``FCVIEngine`` hot path. The index's serving slab (``repro.index.slab``) is
+sharded over the mesh — flat slabs by ROW, IVF slabs by LIST — together with
+the normalized re-scoring originals and the engine's delta insert buffer, and
+the whole per-batch computation runs as ONE jitted ``shard_map``:
+
+  1. query transform: replicated (identical math on every shard; the fused
+     Pallas kernel is preserved inside the shard when ``use_pallas`` is set),
+  2. candidate generation: each shard scans only ITS slab block (kernel-backed
+     when ``use_pallas``) and emits (score, global id) candidates,
+  3. cross-shard merge: the per-axis tree top-k merge
+     (``index.distributed.tree_merge_topk`` over ``flat.merge_topk``) reduces
+     the per-shard sets to the exact global top-k' — only (k' x shards)
+     candidate tuples ever cross the interconnect, never raw score matrices,
+  4. re-ranking: candidate rows are fetched from the ROW-SHARDED normalized
+     originals with a mask+psum distributed gather (each id is owned by
+     exactly one shard; summing one real row with zeros is float-exact), then
+     combined-scored exactly as the single-device path,
+  5. delta merge: the per-shard delta buffer is searched locally, tree-merged,
+     and folded in with the same shard-aware ``merge_topk``.
+
+Parity contract: the sharded step returns results IDENTICAL to the
+single-device ``engine._batch_step`` for any mesh shape (including 1 device)
+— per-row arithmetic is unchanged, per-shard candidate sets provably contain
+every global winner (a shard can hold at most k' of the global top-k', so
+per-shard top-min(k', local) + exact tree merge loses nothing), and the
+exact-refine / re-rank stages run on the same fp32 values.
+``tests/test_sharded_engine.py`` enforces this on a forced 8-device host
+mesh, kernels on and off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import fcvi
+from repro.index import flat as flat_mod
+from repro.index import slab as slab_mod
+from repro.index.distributed import tree_merge_topk
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def _linear_shard_index(axes, sizes):
+    """This device's linear shard index over the (row-major) product axes."""
+    lin = jnp.int32(0)
+    stride = 1
+    for ax, n_ax in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
+        lin = lin + jax.lax.axis_index(ax) * stride
+        stride = stride * n_ax
+    return lin
+
+
+def _gather_rows(local_rows: Array, gids: Array, lin, n_local: int, axes):
+    """Distributed gather from a contiguously row-sharded array.
+
+    ``local_rows`` is this shard's (n_local, ...) block of a (ns*n_local,
+    ...) array; ``gids`` are global row ids (replicated). Each id is owned by
+    exactly one shard: owners contribute the real row, everyone else zeros,
+    and the psum reconstructs the gathered rows replicated. Adding zeros is
+    float-exact, so the result is bit-identical to a local gather.
+    """
+    owner = gids // n_local
+    mine = owner == lin
+    loc = jnp.where(mine, gids % n_local, 0)
+    part = jnp.where(mine[..., None], local_rows[loc], 0)
+    for ax in axes:
+        part = jax.lax.psum(part, ax)
+    return part
+
+
+def _local_flat_topk(vectors: Array, sq_norms: Array, row_ids: Array,
+                     queries: Array, kl: int, use_pallas: bool):
+    """Per-shard flat candidate generation with globally valid ids.
+
+    Mirrors ``flat.search`` exactly (matmul-expansion candidate scores, then
+    the fp32 exact-refine re-ordering), with padding rows (row_ids == -1,
+    +inf squared norms) masked out of the refine so they can never outscore
+    real rows.
+    """
+    nl = vectors.shape[0]
+    kl = min(kl, nl)
+    kk = min(nl, kl + flat_mod.REFINE_PAD)
+    if use_pallas:
+        _, cand = ops.score_topk_padded(vectors, sq_norms, queries, kk)
+    else:
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        scores = -(q2 - 2.0 * queries @ vectors.T + sq_norms[None, :])
+        _, cand = jax.lax.top_k(scores, kk)
+    vals, idx = flat_mod._exact_refine(vectors, queries, cand, kl,
+                                       mask=row_ids >= 0)
+    return vals, row_ids[idx]
+
+
+@dataclasses.dataclass
+class ShardedDelta:
+    """Per-shard view of the engine's delta insert buffer (row-sharded)."""
+
+    vt: Array       # (nd_pad, d) transformed delta rows, sharded
+    sq: Array       # (nd_pad,) squared norms, +inf pads, sharded
+    row_ids: Array  # (nd_pad,) delta-local ids, -1 pads, sharded
+    vn: Array       # (nd_pad, d) normalized originals, sharded
+    fn: Array       # (nd_pad, m) normalized filters, sharded
+    nd: int         # real delta rows
+    n_local: int    # rows per shard
+
+
+class ShardedServing:
+    """Sharded slabs + jitted shard_map steps for one (index, mesh) pair.
+
+    Construction shards the serving state once (``slab.shard`` +
+    row-sharding the re-rank originals); ``step`` lazily builds and caches
+    one jitted shard_map per static (k, k', kd, delta-shape) signature —
+    exactly mirroring the jit cache structure of the single-device
+    ``_batch_step``.
+    """
+
+    def __init__(self, index, mesh, rules=None, *,
+                 placement: str = "contiguous"):
+        from repro.distributed.sharding import AxisRules
+
+        self.index = index
+        self.mesh = mesh
+        self.rules = rules if rules is not None else AxisRules(mesh)
+        self.placement = placement
+        cfg = index.config
+        if cfg.backend == "flat":
+            self.slab = index.backend.slab().shard(
+                mesh, self.rules, placement=placement)
+        elif cfg.backend == "ivf":
+            ivf_placement = "balanced" if placement == "cluster" else placement
+            self.slab = index.backend.slab().shard(
+                mesh, self.rules, placement=ivf_placement,
+                list_sizes=index.backend.list_sizes)
+        else:
+            raise NotImplementedError(
+                f"mesh-sharded serving supports the flat/ivf backends, not "
+                f"{cfg.backend!r}")
+        self.axes = self.slab.axes
+        self.sizes = tuple(mesh.shape[a] for a in self.axes)
+        self.n_shards = slab_mod.axes_size(mesh, self.axes)
+        # normalized originals, contiguously row-sharded for the distributed
+        # re-rank gather (independent of the slab's candidate placement)
+        n = index.size
+        self.rows_local = -(-n // max(self.n_shards, 1))
+        n_pad = self.rows_local * self.n_shards
+        self.vectors_n = self._put_rows(
+            slab_mod.pad_dim0(index.vectors_n, n_pad, 0))
+        self.filters_n = self._put_rows(
+            slab_mod.pad_dim0(index.filters_n, n_pad, 0))
+        self._steps = {}
+
+    def _put_rows(self, x: Array) -> Array:
+        return jax.device_put(x, NamedSharding(self.mesh, P(self.axes)))
+
+    # -- delta ------------------------------------------------------------
+    def shard_delta(self, delta) -> ShardedDelta:
+        """Shard the engine's device-resident delta buffer over the mesh."""
+        nd = delta.vn.shape[0]
+        nl = -(-nd // self.n_shards)
+        nd_pad = nl * self.n_shards
+        ids = jnp.concatenate(
+            [jnp.arange(nd, dtype=jnp.int32),
+             jnp.full((nd_pad - nd,), -1, jnp.int32)])
+        return ShardedDelta(
+            vt=self._put_rows(
+                slab_mod.pad_dim0(delta.flat.vectors, nd_pad, 0)),
+            sq=self._put_rows(
+                slab_mod.pad_dim0(delta.flat.sq_norms, nd_pad, jnp.inf)),
+            row_ids=self._put_rows(ids),
+            vn=self._put_rows(slab_mod.pad_dim0(delta.vn, nd_pad, 0)),
+            fn=self._put_rows(slab_mod.pad_dim0(delta.fn, nd_pad, 0)),
+            nd=nd, n_local=nl,
+        )
+
+    # -- the sharded batch step -------------------------------------------
+    def step(self, delta: Optional[ShardedDelta], q: Array, f: Array, *,
+             k: int, kp: int, kd: int):
+        """One padded batch through the sharded hot path; same contract as
+        ``engine._batch_step``: (scores (b, k), ids (b, k), margin (b,))."""
+        nld = None if delta is None else delta.n_local
+        key = (k, kp, kd, nld)
+        fn = self._steps.get(key)
+        if fn is None:
+            fn = self._steps[key] = self._build_step(k, kp, kd, nld)
+        slab_args = self._slab_args()
+        if delta is None:
+            return fn(self.index.transform, *slab_args, self.vectors_n,
+                      self.filters_n, q, f)
+        return fn(self.index.transform, *slab_args, self.vectors_n,
+                  self.filters_n, delta.vt, delta.sq, delta.row_ids,
+                  delta.vn, delta.fn, q, f)
+
+    def _slab_args(self):
+        s = self.slab
+        if self.index.config.backend == "flat":
+            return (s.vectors, s.sq_norms, s.row_ids)
+        return (s.grouped, s.grouped_sq, s.valid, s.lists, s.centroids,
+                s.c_sq, s.slot_of_list)
+
+    def _slab_specs(self, row):
+        if self.index.config.backend == "flat":
+            return (row, row, row)
+        # grouped layouts are list-sharded; centroid state is replicated
+        return (row, row, row, row, P(), P(), P())
+
+    def _build_step(self, k: int, kp: int, kd: int, nld: Optional[int]):
+        from repro.serve import engine as engine_mod
+
+        cfg = self.index.config
+        axes, sizes = self.axes, self.sizes
+        use_pallas = cfg.use_pallas
+        backend = cfg.backend
+        rows_local = self.rows_local
+        index_size = self.index.size
+        has_delta = nld is not None
+        if backend == "flat":
+            kl = min(kp, self.slab.n_local)
+        else:
+            nprobe = min(cfg.nprobe, self.slab.nlist)
+            lpp = self.slab.lists_per_shard + 1
+            max_list = self.slab.max_list
+            kl_ivf = min(kp, nprobe * max_list)
+
+        def flat_candidates(slab_args, q_t, lin):
+            vectors, sq_norms, row_ids = slab_args
+            return _local_flat_topk(vectors, sq_norms, row_ids, q_t, kl,
+                                    use_pallas)
+
+        def ivf_candidates(slab_args, q_t, lin):
+            grouped, grouped_sq, valid, lists, c, c2, slot_of = slab_args
+            q2 = jnp.sum(q_t * q_t, axis=-1, keepdims=True)
+            # coarse quantizer: replicated, identical to the single-device
+            # path (centroid scoring is just a tiny flat search)
+            if use_pallas:
+                _, probe = ops.score_topk_padded(c, c2, q_t, nprobe)
+            else:
+                cd = -(q2 - 2.0 * q_t @ c.T + c2[None, :])
+                _, probe = jax.lax.top_k(cd, nprobe)
+            slot = slot_of[probe]                          # (b, nprobe)
+            mine = (slot // lpp) == lin
+            # non-local probes go to this shard's all-invalid sentinel slot
+            local = jnp.where(mine, slot % lpp, lpp - 1)
+            if use_pallas:
+                uniq, member = ops.dedup_probes(local.astype(jnp.int32), lpp)
+                vals, flat_ids = ops.ivf_score_topk_dedup(
+                    grouped, grouped_sq, valid, uniq, member, q_t, kl_ivf)
+                cand = lists.reshape(-1)[flat_ids]         # -1 on pad slots
+                return vals - q2, cand
+
+            def one_query(qv, q_sq, slots):
+                cand = lists[slots].reshape(-1)            # (nprobe*max_list,)
+                ok = cand >= 0
+                rows = grouped[slots].reshape(-1, grouped.shape[-1])
+                row_sq = grouped_sq[slots].reshape(-1)
+                s = -(q_sq - 2.0 * rows @ qv + row_sq)
+                s = jnp.where(ok, s, -jnp.inf)
+                v, p = jax.lax.top_k(s, kl_ivf)
+                return v, jnp.where(ok, cand, -1)[p]
+
+            return jax.vmap(one_query)(q_t, q2[:, 0], local)
+
+        local_candidates = (flat_candidates if backend == "flat"
+                            else ivf_candidates)
+        n_slab_args = 3 if backend == "flat" else 7
+
+        def body(tfm, *args):
+            engine_mod._TRACE_COUNT[0] += 1
+            slab_args = args[:n_slab_args]
+            rest = args[n_slab_args:]
+            if has_delta:
+                vn_l, fn_l, dvt, dsq, dids, dvn, dfn, q, f = rest
+            else:
+                vn_l, fn_l, q, f = rest
+            lin = _linear_shard_index(axes, sizes)
+            qn, fqn = tfm.normalize(q, f)
+            q_t = tfm.apply_normalized(qn, fqn, use_pallas=use_pallas)
+
+            vals, gids = local_candidates(slab_args, q_t, lin)
+            vals, gids = tree_merge_topk(vals, gids, axes, sizes, kp)
+            # mirror the single-device id convention for unfillable rows
+            gids = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(gids, 0))
+
+            cv = _gather_rows(vn_l, gids, lin, rows_local, axes)
+            cf = _gather_rows(fn_l, gids, lin, rows_local, axes)
+            score = fcvi.combined_score(cv, cf, qn, fqn, cfg.lam,
+                                        use_pallas=use_pallas)
+            scores, pos = jax.lax.top_k(score, k)
+            ids = jnp.take_along_axis(gids, pos, axis=-1)
+
+            if has_delta:
+                dvals, dgids = _local_flat_topk(dvt, dsq, dids, q_t,
+                                                min(kd, nld), use_pallas)
+                dvals, dgids = tree_merge_topk(dvals, dgids, axes, sizes, kd)
+                safe = jnp.maximum(dgids, 0)
+                dcv = _gather_rows(dvn, safe, lin, nld, axes)
+                dcf = _gather_rows(dfn, safe, lin, nld, axes)
+                s = fcvi.combined_score(dcv, dcf, qn, fqn, cfg.lam,
+                                        use_pallas=use_pallas)
+                s = jnp.where(dgids >= 0, s, -jnp.inf)
+                dv, dp = jax.lax.top_k(s, min(k, kd))
+                did = index_size + jnp.take_along_axis(safe, dp, axis=-1)
+                scores, ids = flat_mod.merge_topk(scores, ids, dv,
+                                                  did.astype(ids.dtype), k)
+
+            margin = scores[:, 0] - scores[:, -1]
+            return scores, ids, margin
+
+        row = P(axes)
+        specs = (P(),) + self._slab_specs(row) + (row, row)
+        if has_delta:
+            specs = specs + (row, row, row, row, row)
+        specs = specs + (P(), P())
+        mapped = shard_map(body, mesh=self.mesh, in_specs=specs,
+                           out_specs=(P(), P(), P()), check_vma=False)
+        return jax.jit(mapped)

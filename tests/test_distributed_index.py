@@ -61,3 +61,64 @@ def test_cluster_layout_balances_shards():
     perm, _ = cluster_sharded_layout(v, centers, n_shards=8)
     # contiguous equal shards by construction
     assert perm.shape[0] == 4096
+
+
+def test_merge_topk_duplicate_ids_across_sets():
+    """Shard/delta candidate sets may carry the same id (e.g. a row probed on
+    two paths): both occurrences compete and the best score wins the front
+    slot — merge_topk is rank-only, dedup is the caller's contract."""
+    va = jnp.asarray([[3.0, 1.0]])
+    ia = jnp.asarray([[7, 9]])
+    vb = jnp.asarray([[2.5, 0.5]])
+    ib = jnp.asarray([[7, 11]])
+    mv, mi = merge_topk(va, ia, vb, ib, 3)
+    np.testing.assert_allclose(np.asarray(mv), [[3.0, 2.5, 1.0]])
+    np.testing.assert_array_equal(np.asarray(mi), [[7, 7, 9]])
+
+
+def test_merge_topk_k_larger_than_total_candidates():
+    """k beyond the pooled candidate count pads with -inf scores / id 0 (the
+    backend convention for unfillable rows) instead of erroring — the shape
+    a shard-merge stage needs when small shards under-fill their sets."""
+    va = jnp.asarray([[1.0, 0.0]])
+    ia = jnp.asarray([[4, 5]])
+    vb = jnp.asarray([[0.5]])
+    ib = jnp.asarray([[6]])
+    mv, mi = merge_topk(va, ia, vb, ib, 6)
+    assert mv.shape == (1, 6) and mi.shape == (1, 6)
+    np.testing.assert_allclose(np.asarray(mv)[0, :3], [1.0, 0.5, 0.0])
+    assert np.isneginf(np.asarray(mv)[0, 3:]).all()
+    np.testing.assert_array_equal(np.asarray(mi)[0, 3:], 0)
+
+
+def test_merge_topk_all_padding_shard():
+    """An all-padding shard (every score -inf) must never displace real
+    candidates, and an all-padding merge stays all-padding."""
+    pad_v = jnp.full((2, 4), -jnp.inf)
+    pad_i = jnp.zeros((2, 4), jnp.int32)
+    real_v = jnp.asarray([[2.0, 1.0, 0.5, 0.1], [9.0, 8.0, 7.0, 6.0]])
+    real_i = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    mv, mi = merge_topk(real_v, real_i, pad_v, pad_i, 4)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(real_v))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(real_i))
+    mv2, _ = merge_topk(pad_v, pad_i, pad_v, pad_i, 4)
+    assert np.isneginf(np.asarray(mv2)).all()
+
+
+def test_balanced_list_layout_packs_within_capacity():
+    """IVF list placement: every list lands on exactly one shard, shard slot
+    capacity is respected, and row loads stay near-balanced."""
+    from repro.index.slab import balanced_list_layout
+
+    r = np.random.default_rng(5)
+    sizes = r.integers(1, 200, size=37)
+    ns, cap = 8, -(-37 // 8)
+    shard_of, slot_in = balanced_list_layout(sizes, ns, cap)
+    assert shard_of.shape == (37,) and (shard_of < ns).all()
+    for s in range(ns):
+        mine = shard_of == s
+        assert mine.sum() <= cap
+        # slots within a shard are distinct
+        assert len(set(slot_in[mine].tolist())) == mine.sum()
+    loads = np.asarray([sizes[shard_of == s].sum() for s in range(ns)])
+    assert loads.max() - loads.min() <= sizes.max()

@@ -173,3 +173,18 @@ def test_ops_fallback_matches_pallas():
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
                                atol=1e-4)
     assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("q,M,dsub,ksub", [(64, 8, 8, 64), (5, 4, 16, 32),
+                                           (130, 2, 8, 16)])
+def test_pq_lut_qdot(q, M, dsub, ksub):
+    """LUT-construction cross-term kernel vs the einsum oracle (incl. query
+    counts that are not a multiple of the kernel's query block)."""
+    r = np.random.default_rng(q + ksub)
+    qs = _rand(r, (q, M, dsub), jnp.float32)
+    cb = _rand(r, (M, ksub, dsub), jnp.float32)
+    got = ops.pq_lut_qdot(qs, cb, block_q=64)
+    want = ref.ref_pq_lut_qdot(qs, cb)
+    assert got.shape == (q, M, ksub)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

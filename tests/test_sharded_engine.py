@@ -1,0 +1,248 @@
+"""Mesh-sharded serving parity + elastic checkpoint lifecycle.
+
+The contract under test: the shard_map engine step (``repro.serve.sharded``)
+is a pure DEPLOYMENT knob — for any mesh shape, flat or IVF, kernels on or
+off, with or without a live delta buffer, it returns top-k ids and scores
+IDENTICAL to the single-device jitted ``_batch_step``; and an engine saved
+from one mesh restores onto a DIFFERENT (smaller) mesh serving identical
+results. Fast cases run in-process on a 1-device mesh (the default mesh
+shape); the multi-shard cases run in a subprocess with 8 forced host
+devices, exactly like tests/test_multidevice.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build, fcvi
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.launch.mesh import make_mesh
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    return corpus, np.asarray(q), np.asarray(fq)
+
+
+def _engines(corpus, backend, use_pallas, mesh, **eng_kw):
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=16,
+                     nprobe=4, use_pallas=use_pallas)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    kw = dict(k=5, batch_size=16, compact_threshold=256)
+    kw.update(eng_kw)
+    e0 = FCVIEngine(idx, EngineConfig(**kw))
+    e1 = FCVIEngine(idx, EngineConfig(**kw), mesh=mesh)
+    return e0, e1
+
+
+def _assert_identical(a, b):
+    (s0, i0), (s1, i1) = a, b
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_one_device_mesh_identical_with_delta(data, backend, use_pallas):
+    """A 1-device mesh (the default mesh shape) must be bit-identical to the
+    meshless engine — including the sharded delta merge path."""
+    corpus, q, fq = data
+    mesh = make_mesh((1, 1), ("data", "model"))
+    e0, e1 = _engines(corpus, backend, use_pallas, mesh)
+    r = np.random.default_rng(0)
+    nv = r.normal(size=(20, corpus.spec.d)).astype(np.float32)
+    nf = corpus.filters[:20].copy()
+    e0.insert(nv, nf)
+    e1.insert(nv, nf)
+    _assert_identical(e0.search(q, fq), e1.search(q, fq))
+
+
+def test_pq_backend_refuses_mesh(data):
+    corpus, _, _ = data
+    cfg = FCVIConfig(backend="pq", pq_m=8, pq_ksub=32, pq_coarse=8)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    with pytest.raises(NotImplementedError):
+        FCVIEngine(idx, mesh=make_mesh((1, 1), ("data", "model")))
+
+
+def test_save_restore_roundtrip_meshless(data, tmp_path):
+    """build -> insert -> save -> restore -> serve must be identical, with
+    the pending delta rows surviving the checkpoint."""
+    corpus, q, fq = data
+    e0, _ = _engines(corpus, "ivf", False, make_mesh((1, 1), ("data", "model")))
+    r = np.random.default_rng(1)
+    e0.insert(r.normal(size=(12, corpus.spec.d)).astype(np.float32),
+              corpus.filters[:12].copy())
+    want = e0.search(q, fq)
+    e0.save(str(tmp_path), step=3)
+    er = FCVIEngine.restore(str(tmp_path))
+    assert er.delta_size() == 12
+    assert er.index.config == e0.index.config
+    _assert_identical(want, er.search(q, fq))
+
+
+def test_index_state_roundtrip_all_backends(data):
+    """index_state/index_from_state reproduce identical query results for
+    every backend (incl. rematerialised IVF slabs and PQ LUT terms)."""
+    corpus, q, fq = data
+    qj, fj = jnp.asarray(q), jnp.asarray(fq)
+    for backend in ("flat", "ivf", "pq"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=16,
+                         nprobe=4, pq_m=8, pq_ksub=32, pq_coarse=8)
+        idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                    cfg)
+        idx2 = fcvi.index_from_state(cfg, fcvi.index_state(idx))
+        _assert_identical(fcvi.query(idx, qj, fj, 7),
+                          fcvi.query(idx2, qj, fj, 7))
+
+
+_SUBPROCESS_PRELUDE = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import EngineConfig, FCVIEngine
+
+    assert len(jax.devices()) == 8
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    q, fq = np.asarray(q), np.asarray(fq)
+
+    def engines(backend, use_pallas, mesh, placement="contiguous"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4, use_pallas=use_pallas)
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        ek = dict(k=5, batch_size=16, compact_threshold=256)
+        return (FCVIEngine(idx, EngineConfig(**ek)),
+                FCVIEngine(idx, EngineConfig(**ek), mesh=mesh,
+                           placement=placement))
+
+    def check(a, b, tag):
+        (s0, i0), (s1, i1) = a, b
+        assert (np.asarray(i0) == np.asarray(i1)).all(), tag
+        assert (np.asarray(s0) == np.asarray(s1)).all(), tag
+"""
+
+
+@pytest.mark.slow
+def test_eight_device_mesh_parity():
+    """Acceptance: top-k ids and scores on a forced 8-device host mesh match
+    the single-device engine exactly — flat and IVF, kernels on and off,
+    with a live delta buffer."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    mesh = make_mesh((8, 1), ("data", "model"))
+    r = np.random.default_rng(0)
+    nv = r.normal(size=(20, spec.d)).astype(np.float32)
+    nf = corpus.filters[:20].copy()
+    for backend in ("flat", "ivf"):
+        for use_pallas in (False, True):
+            e0, e1 = engines(backend, use_pallas, mesh)
+            assert e1._sharded.n_shards == 8
+            check(e0.search(q, fq), e1.search(q, fq),
+                  (backend, use_pallas, "no-delta"))
+            e0.insert(nv, nf); e1.insert(nv, nf)
+            e0._cache.clear(); e1._cache.clear()
+            check(e0.search(q, fq), e1.search(q, fq),
+                  (backend, use_pallas, "delta"))
+    print("8-device parity OK")
+    """)
+
+
+@pytest.mark.slow
+def test_cluster_placement_parity_and_multi_axis_mesh():
+    """Filter-centric placements (cluster row packing, balanced list packing)
+    and a 4x2 two-axis merge tree must stay exact."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rules_mesh = make_mesh((8, 1), ("data", "model"))
+    for backend in ("flat", "ivf"):
+        e0, e1 = engines(backend, False, rules_mesh, placement="cluster")
+        check(e0.search(q, fq), e1.search(q, fq), (backend, "cluster"))
+    # two-axis corpus sharding: corpus rule resolves to ("data",) on this
+    # mesh; override to shard over both axes and merge per axis
+    from repro.distributed.sharding import AxisRules
+    rules = AxisRules(mesh, {"corpus": ("data", "model"),
+                             "ivf_lists": ("data", "model")})
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    ek = dict(k=5, batch_size=16)
+    e0 = FCVIEngine(idx, EngineConfig(**ek))
+    e1 = FCVIEngine(idx, EngineConfig(**ek), mesh=mesh, rules=rules)
+    assert e1._sharded.n_shards == 8 and len(e1._sharded.axes) == 2
+    check(e0.search(q, fq), e1.search(q, fq), "two-axis")
+    print("placement + multi-axis parity OK")
+    """)
+
+
+@pytest.mark.slow
+def test_elastic_restore_onto_smaller_mesh():
+    """Acceptance: save from an 8-device mesh, restore onto a 2-device mesh
+    (and meshless), serve identical results — the elastic-restart path."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    import tempfile
+    mesh8 = make_mesh((8, 1), ("data", "model"))
+    mesh2 = make_mesh((2, 1), ("data", "model"))
+    for backend in ("flat", "ivf"):
+        _, e8 = engines(backend, False, mesh8)
+        r = np.random.default_rng(0)
+        e8.insert(r.normal(size=(20, spec.d)).astype(np.float32),
+                  corpus.filters[:20].copy())
+        want = e8.search(q, fq)
+        tmp = tempfile.mkdtemp()
+        e8.save(tmp, step=1)
+        er2 = FCVIEngine.restore(tmp, mesh=mesh2)
+        assert er2.delta_size() == 20 and er2._sharded.n_shards == 2
+        check(want, er2.search(q, fq), (backend, "restore-2dev"))
+        er0 = FCVIEngine.restore(tmp)
+        check(want, er0.search(q, fq), (backend, "restore-meshless"))
+    print("elastic restore OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_step_does_not_retrace():
+    """The shard_map step must trace once per (shape, delta, k') signature,
+    like the single-device step — steady-state batches may not recompile."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    from repro.serve import engine as engine_mod
+    mesh = make_mesh((8, 1), ("data", "model"))
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                       compact_threshold=512,
+                                       escalate_margin=1e9), mesh=mesh)
+    r = np.random.default_rng(4)
+    eng.insert(r.normal(size=(16, spec.d)).astype(np.float32),
+               corpus.filters[:16].copy())
+    qq, ff = sample_queries(corpus, 16, seed=9)
+    eng.search(qq, ff)
+    warm = engine_mod.trace_count()
+    for seed in (10, 11, 12):
+        qq, ff = sample_queries(corpus, 16, seed=seed)
+        eng._cache.clear()
+        eng.search(qq, ff)
+    assert engine_mod.trace_count() == warm, "sharded step retraced"
+    print("no retracing OK")
+    """)
