@@ -14,15 +14,20 @@ Writes BENCH_query_path.json next to this file:
 
   {"results": [{backend, use_pallas, storage_dtype, batch, qps,
                 ms_per_query}, ...],
+   "routed": [{backend, routing, filter_mix, qps, shard_skip_rate,
+               router_fallback_frac}, ...],
    "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...,
    "speedup_batch64_flat_vs_pr1_jnp": ...}
 
 ``--host-devices N`` forces N host (CPU) devices BEFORE jax initialises and
 adds mesh-sharded engine rows (flat + IVF on a 1-device and an N-device
-mesh), exercising the shard_map batch step end to end. NOTE: off-TPU hosts
-run the Pallas kernels in interpret mode and host "devices" share the same
-cores, so ``use_pallas=true`` and ``sharded`` rows measure dispatch
-correctness and sharding overhead, not TPU performance.
+mesh), exercising the shard_map batch step end to end, plus the dense-vs-
+routed rows on filter-centric (cluster) placement: a selective filter mix
+(every query targets one category) against a broad mix, with the fraction
+of per-batch shard scans the router skipped and the dense-fallback rate.
+NOTE: off-TPU hosts run the Pallas kernels in interpret mode and host
+"devices" share the same cores, so ``use_pallas=true`` and ``sharded`` rows
+measure dispatch correctness and sharding overhead, not TPU performance.
 
 Usage: PYTHONPATH=src python benchmarks/query_path.py [--n 8192] [--quick]
            [--host-devices 8]
@@ -138,21 +143,37 @@ def legacy_search(engine: FCVIEngine, queries: np.ndarray,
 
 def make_engine(corpus, backend: str, use_pallas: bool, batch: int,
                 n_delta: int, storage_dtype: str = "float32",
-                mesh_devices: int = 0) -> FCVIEngine:
-    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                mesh_devices: int = 0, placement: str = "contiguous",
+                routing: str = "dense", alpha: float = 1.0,
+                index=None) -> FCVIEngine:
+    cfg = FCVIConfig(alpha=alpha, lam=0.6, c=8.0, backend=backend,
                      nlist=64, nprobe=8, pq_ksub=64, pq_coarse=16,
                      use_pallas=use_pallas, storage_dtype=storage_dtype)
-    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    idx = index if index is not None else build(
+        jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
     mesh = (make_mesh((mesh_devices, 1), ("data", "model"))
             if mesh_devices else None)
     eng = FCVIEngine(idx, EngineConfig(k=10, batch_size=batch,
                                        compact_threshold=4 * n_delta),
-                     mesh=mesh)
+                     mesh=mesh, placement=placement, routing=routing)
     if n_delta:
         r = np.random.default_rng(99)
         eng.insert(r.normal(size=(n_delta, corpus.spec.d)).astype(np.float32),
                    corpus.filters[:n_delta].copy())
     return eng
+
+
+def sample_selective_queries(corpus, n: int, seed: int = 5, cat: int = 1):
+    """Filter-selective traffic: every query targets the SAME category filter
+    (drawn from that category's rows), the workload filter-centric placement
+    concentrates onto few shards. ``cat=1`` picks a mid-size Zipf category —
+    the head category genuinely spans several shards by row count alone."""
+    rng = np.random.default_rng(seed)
+    members = np.nonzero(corpus.cat_labels == cat)[0]
+    idx = members[rng.integers(0, len(members), n)]
+    q = (corpus.vectors[idx] + 0.25 * corpus.spec.noise
+         * rng.normal(size=(n, corpus.spec.d))).astype(np.float32)
+    return q, corpus.filters[idx].copy()
 
 
 def time_search(fn, queries, filters, iters: int):
@@ -235,6 +256,54 @@ def main():
               f"mesh={mesh_devices} "
               f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q")
 
+    # routed vs dense sharded serving on filter-centric (cluster) placement:
+    # alpha=2.0 strengthens the filter fold so selective traffic is
+    # geometrically local (the routed win is a geometry property — weakly
+    # folded corpora route conservatively and fall back dense more often)
+    routed_rows = []
+    if ndev > 1:
+        for backend in (["flat"] if args.quick else ["flat", "ivf"]):
+            idx_cache = {}
+            for mix in ("selective", "broad"):
+                if mix == "selective":
+                    q, fq = sample_selective_queries(corpus, 64)
+                else:
+                    q, fq = sample_queries(corpus, 64, seed=1)
+                    q, fq = np.asarray(q), np.asarray(fq)
+                for routing in ("dense", "routed"):
+                    eng = make_engine(corpus, backend, False, 64,
+                                      args.n_delta, mesh_devices=ndev,
+                                      placement="cluster", routing=routing,
+                                      alpha=2.0, index=idx_cache.get(backend))
+                    idx_cache[backend] = eng.index
+
+                    def run(queries, filters, eng=eng):
+                        eng._cache.clear()
+                        return eng.search(queries, filters)
+
+                    run(q, fq)                 # warmup (jit compile)
+                    eng.stats = type(eng.stats)()  # count timed runs only
+                    ts = []
+                    for _ in range(args.iters):
+                        t0 = time.perf_counter()
+                        run(q, fq)
+                        ts.append(time.perf_counter() - t0)
+                    t = float(np.median(ts))
+                    st = eng.stats
+                    row = dict(backend=backend, routing=routing,
+                               placement="cluster", filter_mix=mix,
+                               batch=64, mesh_devices=ndev, alpha=2.0,
+                               qps=64 / t, ms_per_query=1e3 * t / 64,
+                               shard_skip_rate=round(st.shard_skip_rate, 4),
+                               router_fallback_frac=round(
+                                   st.router_fallbacks / max(st.queries, 1),
+                                   4))
+                    routed_rows.append(row)
+                    print(f"{backend:4s} {routing:6s} mix={mix:9s} "
+                          f"mesh={ndev} qps={row['qps']:9.1f}  "
+                          f"skip={row['shard_skip_rate']:.2f} "
+                          f"fb={row['router_fallback_frac']:.2f}")
+
     # legacy per-query loop baseline (jnp kernels off, flat, batch 64)
     q, fq = sample_queries(corpus, 64, seed=1)
     q, fq = np.asarray(q), np.asarray(fq)
@@ -263,9 +332,15 @@ def main():
                   "the engine batch step is one jax.jit-compiled function; "
                   "mesh_devices>0 rows run the shard_map sharded step — "
                   "forced host devices share cores, so those rows measure "
-                  "sharding overhead, not scaling"),
+                  "sharding overhead, not scaling; 'routed' rows compare "
+                  "dense vs filter-routed serving on cluster placement "
+                  "(alpha=2): shard_skip_rate is the fraction of per-batch "
+                  "shard scans the router skipped, router_fallback_frac the "
+                  "queries re-run dense because the clipping bound could "
+                  "not certify exactness"),
         ),
         results=results,
+        routed=routed_rows,
         legacy=legacy,
         speedup_batch64_flat_vs_legacy=new64["qps"] / legacy["qps"],
     )

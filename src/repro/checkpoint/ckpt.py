@@ -57,6 +57,17 @@ def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
 
 def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
          keep: int = 3) -> str:
+    """Atomically write one checkpoint step; returns the step directory.
+
+    ``tree``: any pytree of arrays (jax or numpy; sharded jax arrays are
+    gathered to host by ``np.asarray``). Shapes/dtypes are recorded in the
+    manifest; bf16/f8 leaves are stored as same-width uint views and
+    restored to their true dtype on load. ``metadata``: JSON-serializable
+    dict stored in the manifest (configs, serving knobs). ``keep``: older
+    step directories beyond this count are garbage-collected (0 keeps all).
+    The write is tmp-dir + rename, so a crash mid-save never corrupts the
+    newest complete step.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
     treedef = jax.tree_util.tree_structure(tree)

@@ -56,6 +56,22 @@ BACKENDS = ("flat", "ivf", "pq")
 
 @dataclasses.dataclass(frozen=True)
 class FCVIConfig:
+    """Static configuration of an FCVI index (hashable; the jit-static aux
+    of the ``FCVIIndex`` pytree).
+
+    Semantics-bearing fields: ``alpha`` (filter fold strength — larger
+    separates filter groups harder), ``lam`` (combined-score weight),
+    ``c`` (k' over-retrieval headroom), ``mode`` (psi variant), ``backend``
+    + its shape knobs (``n_clusters``/``nlist``/``nprobe``/``pq_*``).
+
+    Dispatch-changing fields (results stay IDENTICAL, only the executed
+    code changes): ``use_pallas`` routes the query path through the Pallas
+    kernels in ``repro.kernels.ops`` (False = pure-jnp reference), and
+    ``storage_dtype`` selects the corpus slab precision ("float32" or
+    "bfloat16"; reduced storage keeps fp32 norms/accumulation plus the
+    exact-refine pass, so top-k ordering is exact w.r.t. stored rows).
+    """
+
     alpha: float = 1.0
     lam: float = 0.5            # lambda in [0,1]: 1 => pure vector similarity
     c: float = 4.0              # k' headroom constant (Alg. 1 line 7)

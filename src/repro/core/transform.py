@@ -195,11 +195,17 @@ class Transform:
         return out.reshape(*v.shape[:-1], d)
 
     def apply(self, v: Array, f: Array, *, use_pallas: bool = False) -> Array:
-        """Normalize then transform. v: (..., d), f: (..., m) -> (..., d).
+        """Normalize then transform RAW inputs: psi(norm(v), norm(f), alpha).
 
-        With ``use_pallas`` the whole chain — per-dim standardize of v and f,
-        filter fold, subtract — runs as ONE fused kernel instead of 4+ jnp
-        ops (cluster mode substitutes centers first, then fuses the rest).
+        v: (..., d) fp32 raw vectors; f: (..., m) fp32 raw filter values
+        (any leading batch axes). Returns (..., d) fp32 transformed vectors
+        — the space every search backend indexes.
+
+        ``use_pallas=False`` (default) runs the jnp reference chain;
+        ``True`` runs the whole chain — per-dim standardize of v and f,
+        filter fold, subtract — as ONE fused kernel (``ops.fused_transform``)
+        instead of 4+ jnp ops (cluster mode substitutes centers first, then
+        fuses the rest). Both paths return identical values.
         """
         if not use_pallas:
             vn, fn = self.normalize(v, f)
@@ -216,6 +222,15 @@ class Transform:
 
     def apply_normalized(self, vn: Array, fn: Array, *,
                          use_pallas: bool = False) -> Array:
+        """psi on ALREADY-normalized inputs (the hot-path entry point: the
+        engine normalizes once and reuses vn/fn for re-ranking).
+
+        vn: (..., d) fp32 standardized vectors; fn: (..., m) fp32
+        standardized filters. Returns (..., d) fp32. ``use_pallas`` selects
+        the fused kernel (identity normalizers are passed so the kernel
+        only folds + subtracts) vs the jnp per-mode reference; identical
+        results either way.
+        """
         if use_pallas:
             f_in = fn
             if self.mode == "cluster":

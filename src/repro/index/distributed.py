@@ -13,7 +13,7 @@ few shards; `cluster_sharded_layout` computes that permutation and
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,23 @@ def _local_search(vectors: Array, sq_norms: Array, queries: Array, k: int,
     scores = -(q2 - 2.0 * queries @ vectors.T + sq_norms[None, :])
     vals, idx = jax.lax.top_k(scores, min(k, vectors.shape[0]))
     return vals, idx + row_offset
+
+
+def linear_shard_index(axes: Sequence[str], sizes: Sequence[int]):
+    """This device's linear shard index over the (row-major) product axes.
+
+    The linearization matches how ``PartitionSpec((axes,))`` lays out dim-0
+    blocks over the mesh, so ``row // n_local == linear_shard_index`` holds
+    for contiguously row-sharded arrays — the ownership convention shared by
+    the distributed gather, the tree merge offsets and the shard router.
+    Must be called inside a ``shard_map`` body over ``axes``.
+    """
+    lin = jnp.int32(0)
+    stride = 1
+    for ax, n_ax in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
+        lin = lin + jax.lax.axis_index(ax) * stride
+        stride = stride * n_ax
+    return lin
 
 
 def merge_over_axis(vals: Array, idx: Array, axis: str, k: int):
@@ -120,28 +137,82 @@ def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
     )
 
 
+def affinity_group_layout(centers, sizes, n_shards: int,
+                          slot_capacity: Optional[int] = None,
+                          row_slack: float = 1.3):
+    """Shard assignment for groups (psi-clusters / inverted lists) that packs
+    NEARBY groups onto the SAME shard, subject to balance caps.
+
+    ``centers``: (ng, d) group centers (numpy/jax, fp32); ``sizes``: (ng,)
+    row counts. One region seed per shard is picked with a small k-means over
+    the group centers; groups are then placed largest-first onto the nearest
+    seed that still has free slot capacity (at most ``slot_capacity`` groups
+    per shard) and row headroom (``row_slack`` x the mean shard load); a
+    group no shard can take within the row cap falls back to the
+    least-loaded shard with a free slot. Returns shard_of_group (ng,) int32.
+
+    This is what makes routed serving skip shards: a query's co-probed
+    groups sit in the same region of psi-space, so affinity packing puts
+    them on few shards — the pure load-balance packers scatter them and
+    every query ends up touching every shard.
+    """
+    import numpy as np
+
+    from repro.core.clustering import kmeans
+
+    centers = np.asarray(centers, np.float32)
+    sizes = np.asarray(sizes, np.int64)
+    ng = centers.shape[0]
+    if n_shards <= 1:
+        return np.zeros((ng,), np.int32)
+    if ng <= n_shards:
+        return np.arange(ng, dtype=np.int32) % n_shards
+    seeds, _ = kmeans(jax.random.PRNGKey(0), jnp.asarray(centers), n_shards,
+                      iters=10)
+    seeds = np.asarray(seeds)
+    d2 = np.sum((centers[:, None, :] - seeds[None]) ** 2, axis=-1)
+    cap_rows = int(np.ceil(sizes.sum() / n_shards * row_slack))
+    cap_slots = slot_capacity if slot_capacity is not None else ng
+    load = np.zeros(n_shards, np.int64)
+    used = np.zeros(n_shards, np.int64)
+    shard_of = np.zeros(ng, np.int32)
+    for g in np.argsort(-sizes, kind="stable"):
+        placed = False
+        for s in np.argsort(d2[g], kind="stable"):
+            if used[s] < cap_slots and load[s] + sizes[g] <= cap_rows:
+                shard_of[g] = s
+                placed = True
+                break
+        if not placed:
+            free = np.nonzero(used < cap_slots)[0]
+            s = free[np.argmin(load[free])]
+            shard_of[g] = s
+        used[shard_of[g]] += 1
+        load[shard_of[g]] += sizes[g]
+    return shard_of
+
+
 def cluster_sharded_layout(vectors: Array, centroids: Array, n_shards: int):
     """Permutation placing whole clusters on shards (filter-centric placement).
 
     Returns (perm, shard_of_cluster): ``vectors[perm]`` groups rows so that
     shard s holds the contiguous slice [s*n/n_shards, (s+1)*n/n_shards) and
-    clusters are greedily packed (largest first) to balance shard loads.
+    clusters are packed by CENTER AFFINITY (``affinity_group_layout``:
+    nearby psi-clusters co-locate, which is what lets the routed serving
+    step skip shards) under a row-load cap, then rebalanced to exact equal
+    shard sizes by stealing overflow rows.
     """
     import numpy as np
 
     labels = np.asarray(assign(vectors, centroids))
     n = len(labels)
     nclusters = centroids.shape[0]
-    order = np.argsort([-np.sum(labels == c) for c in range(nclusters)])
-    shard_load = np.zeros(n_shards, np.int64)
-    shard_of_cluster = np.zeros(nclusters, np.int32)
+    sizes = np.bincount(labels, minlength=nclusters)
+    shard_of_cluster = affinity_group_layout(centroids, sizes, n_shards)
     shard_members: list[list[int]] = [[] for _ in range(n_shards)]
-    for c in order:
-        members = np.nonzero(labels == c)[0]
-        s = int(np.argmin(shard_load))
-        shard_of_cluster[c] = s
-        shard_load[s] += len(members)
-        shard_members[s].extend(members.tolist())
+    for c in range(nclusters):
+        shard_members[shard_of_cluster[c]].extend(
+            np.nonzero(labels == c)[0].tolist())
     # round-robin rebalance to exact equal shard sizes (pad via stealing)
     target = n // n_shards
     overflow: list[int] = []
@@ -156,29 +227,37 @@ def cluster_sharded_layout(vectors: Array, centroids: Array, n_shards: int):
 
 
 def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
-    """Like sharded_search_fn but each shard is given a per-query probe mask;
-    unprobed shards contribute -inf rows (their matmul result is discarded by
-    XLA's select; on real hardware the win is realised by the engine batching
-    queries per shard-group so unprobed shards run other queries).
+    """Like sharded_search_fn but each shard is given a per-query probe mask.
+
+    Per-query routed semantics: a query's candidates come ONLY from shards
+    its ``probe_mask`` row selects (unselected shards contribute ``-inf``
+    candidate rows). Shards no query in the batch routes to skip their scan
+    entirely: the local matmul + top-k runs inside a ``lax.cond`` whose
+    predicate is "any query probes me", so an unprobed shard executes the
+    zero-work branch instead of a discarded matmul. The serving-engine
+    counterpart — router computed in-trace from the slab's placement tables,
+    with an exactness bound + dense fallback — is the routed batch step in
+    ``repro.serve.sharded``.
     """
     axes = tuple(shard_axes)
-    base = sharded_search_fn(mesh, shard_axes, k)  # reuse merge structure
+    sizes = tuple(mesh.shape[a] for a in axes)
 
     def local_fn(vectors, sq_norms, queries, probe_mask):
         n_local = vectors.shape[0]
-        offset = jnp.int32(0)
-        stride = n_local
-        shard_lin = jnp.int32(0)
-        lin_stride = 1
-        for ax in reversed(axes):
-            aidx = jax.lax.axis_index(ax)
-            offset = offset + aidx * stride
-            stride = stride * axis_size(ax)
-            shard_lin = shard_lin + aidx * lin_stride
-            lin_stride = lin_stride * axis_size(ax)
-        vals, idx = _local_search(vectors, sq_norms, queries, k, offset)
-        mine = probe_mask[:, shard_lin]  # (q,)
-        vals = jnp.where(mine[:, None], vals, -jnp.inf)
+        lin = linear_shard_index(axes, sizes)
+        offset = lin * n_local
+        mine = probe_mask[:, lin]  # (q,)
+        kl = min(k, n_local)
+
+        def scan(_):
+            vals, idx = _local_search(vectors, sq_norms, queries, kl, offset)
+            return jnp.where(mine[:, None], vals, -jnp.inf), idx
+
+        def skip(_):
+            return (jnp.full((queries.shape[0], kl), -jnp.inf, queries.dtype),
+                    jnp.zeros((queries.shape[0], kl), jnp.int32) + offset)
+
+        vals, idx = jax.lax.cond(jnp.any(mine), scan, skip, None)
         if vals.shape[-1] < k:
             pad = k - vals.shape[-1]
             vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)

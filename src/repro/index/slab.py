@@ -124,16 +124,33 @@ class FlatSlab:
               rng: Optional[Array] = None) -> "ShardedFlatSlab":
         """Row-shard this slab over the mesh axes of the "corpus" rule.
 
+        Args: ``mesh`` + an ``AxisRules`` whose "corpus" entry names the mesh
+        axes to shard dim 0 over; ``vectors`` may be fp32 or bf16 (the
+        engine's ``storage_dtype`` knob) — sq norms stay fp32 either way.
+
         ``placement="contiguous"`` keeps corpus order (bit-compatible with the
         single-device scan); ``"cluster"`` permutes rows so psi-clusters land
         on single shards (filter-centric placement — the transformed corpus
         clusters by filter value, so filtered traffic concentrates per shard).
+        ``centers`` optionally fixes the psi-cluster geometry ((ncl, d) fp32,
+        e.g. restored from a checkpoint so a restored engine routes
+        identically); otherwise a k-means over the stored rows picks
+        ``min(4 * n_shards, n)`` centers.
+
+        Cluster placement additionally derives the ROUTING tables consumed by
+        the routed serving step (``repro.serve.sharded``): ``router_centers``
+        (ncl, d), ``router_radii`` (ncl,) — max distance of a cluster's rows
+        to its center, the ball bound used for the exactness check — and the
+        ``cluster_to_shard`` incidence (ncl, n_shards) marking every shard
+        holding at least one row of each cluster (multi-hot: the load
+        balancer may split a cluster's remainder across shards).
         """
         axes = resolve_axes(mesh, rules, "corpus")
         ns = axes_size(mesh, axes)
         n = self.size
+        router_centers = router_radii = cluster_to_shard = None
         if placement == "cluster" and ns > 1:
-            from repro.core.clustering import kmeans
+            from repro.core.clustering import assign, kmeans
             from repro.index.distributed import cluster_sharded_layout
 
             v32 = self.vectors.astype(jnp.float32)
@@ -148,6 +165,23 @@ class FlatSlab:
                 rest = jnp.setdiff1d(jnp.arange(n), perm, size=n - perm.shape[0])
                 perm = jnp.concatenate([perm, rest])
             row_ids = perm.astype(jnp.int32)
+            # routing tables, derived from the ACTUAL placement (shard of a
+            # row = its slab position // n_local, which also covers rebalanced
+            # remainder rows that left their cluster's home shard)
+            ncl = centers.shape[0]
+            labels = np.asarray(assign(v32, centers))           # corpus order
+            c_np = np.asarray(centers, np.float32)
+            dist = np.linalg.norm(
+                np.asarray(v32, np.float32) - c_np[labels], axis=-1)
+            radii = np.zeros((ncl,), np.float32)
+            np.maximum.at(radii, labels, dist.astype(np.float32))
+            n_local = (n + (-n % ns)) // ns
+            perm_np = np.asarray(perm)
+            inc = np.zeros((ncl, ns), np.float32)
+            inc[labels[perm_np], np.arange(n) // n_local] = 1.0
+            router_centers = jnp.asarray(c_np)
+            router_radii = jnp.asarray(radii)
+            cluster_to_shard = jnp.asarray(inc)
         elif placement == "contiguous" or ns <= 1:
             row_ids = jnp.arange(n, dtype=jnp.int32)
         else:
@@ -162,12 +196,20 @@ class FlatSlab:
             row_ids=_put(mesh, axes, ids),
             mesh=mesh, axes=axes, n_real=n,
             n_local=(n + n_pad) // ns, placement=placement,
+            router_centers=router_centers, router_radii=router_radii,
+            cluster_to_shard=cluster_to_shard,
         )
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardedFlatSlab:
-    """Row-sharded flat slab (host-side container, not a pytree)."""
+    """Row-sharded flat slab (host-side container, not a pytree).
+
+    The three ``router_*``/``cluster_to_shard`` tables are the routing
+    metadata of filter-centric placement; they are only populated for
+    ``placement="cluster"`` on a real (>1 shard) mesh and are replicated
+    (small: ncl ~ 4 * n_shards).
+    """
 
     vectors: Array        # (n_pad, d) sharded P(axes); zero pad rows
     sq_norms: Array       # (n_pad,) sharded; +inf pad rows
@@ -177,6 +219,9 @@ class ShardedFlatSlab:
     n_real: int
     n_local: int          # rows per shard
     placement: str
+    router_centers: Optional[Array] = None   # (ncl, d) fp32 psi-cluster centers
+    router_radii: Optional[Array] = None     # (ncl,) fp32 max member distance
+    cluster_to_shard: Optional[Array] = None  # (ncl, ns) 0/1 incidence
 
     @property
     def n_shards(self) -> int:
@@ -218,13 +263,26 @@ class IVFSlab:
               list_sizes: Optional[Array] = None) -> "ShardedIVFSlab":
         """List-shard the grouped layout over the "ivf_lists" rule axes.
 
+        Args: ``mesh`` + an ``AxisRules`` whose "ivf_lists" entry names the
+        mesh axes; ``list_sizes`` ((nlist,) int) skips recounting ``valid``.
+        The grouped slabs keep their storage dtype (fp32 or bf16); centroid
+        state stays replicated fp32.
+
         Whole inverted lists (= psi-clusters of the transformed corpus) are
         packed onto shards; ``placement="balanced"`` greedily packs largest
         lists first onto the least-loaded shard (row-count balance, the
         filter-centric analogue of ``cluster_sharded_layout``);
-        ``"contiguous"`` blocks list ids in order. Each shard's local block
+        ``"affinity"`` packs lists with NEARBY centroids onto the same shard
+        under balance caps (``distributed.affinity_group_layout`` — the
+        placement routed serving wants: a query's co-probed lists share a
+        shard, so unprobed shards can skip); ``"contiguous"`` blocks list
+        ids in order. Each shard's local block
         carries ``lists_per_shard + 1`` slots — the last is an all-invalid
-        sentinel that non-local probes are routed to.
+        sentinel that non-local probes are routed to. The resulting
+        ``slot_of_list`` table doubles as the routing table: a probed list's
+        owner shard is ``slot_of_list[g] // (lists_per_shard + 1)``
+        (``ShardedIVFSlab.list_to_shard``), which the routed serving step
+        uses to skip shards owning none of a query's probed lists.
         """
         axes = resolve_axes(mesh, rules, "ivf_lists")
         ns = axes_size(mesh, axes)
@@ -236,6 +294,17 @@ class IVFSlab:
         if placement == "balanced" and ns > 1:
             shard_of, slot_in_shard = balanced_list_layout(
                 np.asarray(list_sizes), ns, lp)
+        elif placement == "affinity" and ns > 1:
+            from repro.index.distributed import affinity_group_layout
+
+            shard_of = affinity_group_layout(
+                np.asarray(self.centroids, np.float32),
+                np.asarray(list_sizes), ns, slot_capacity=lp)
+            slot_in_shard = np.zeros((nlist,), np.int32)
+            counts = np.zeros((ns,), np.int32)
+            for g in range(nlist):
+                slot_in_shard[g] = counts[shard_of[g]]
+                counts[shard_of[g]] += 1
         elif placement == "contiguous" or ns <= 1:
             shard_of = np.arange(nlist) // lp
             slot_in_shard = np.arange(nlist) % lp
@@ -288,6 +357,13 @@ class ShardedIVFSlab:
     @property
     def n_shards(self) -> int:
         return axes_size(self.mesh, self.axes)
+
+    @property
+    def list_to_shard(self) -> Array:
+        """(nlist,) int32 shard owning each inverted list — every list is
+        wholly owned by one shard, so this routing table is exact (the IVF
+        analogue of the flat slab's ``cluster_to_shard`` incidence)."""
+        return self.slot_of_list // (self.lists_per_shard + 1)
 
 
 def balanced_list_layout(list_sizes: np.ndarray, n_shards: int,

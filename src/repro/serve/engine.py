@@ -32,6 +32,16 @@ are IDENTICAL to the single-device step for any mesh shape (a 1-device mesh
 is the trivial case); ``mesh=None`` (the default) keeps the single-device
 ``_batch_step``.
 
+Routed serving: ``FCVIEngine(..., mesh=mesh, placement="cluster",
+routing="routed")`` turns filter-centric placement into a throughput lever —
+the sharded step routes each query to the shards owning its nearby
+psi-clusters (flat) or probed inverted lists (IVF) and unrouted shards skip
+candidate generation entirely. The dispatch layer sorts each cache-miss
+queue by router signature so co-routed queries share batches, and any query
+whose routed clipping bound cannot certify exactness is transparently
+re-run through the dense step (``stats.router_fallbacks``), keeping routed
+results identical to dense results end to end.
+
 Lifecycle: ``engine.save(ckpt_dir)`` checkpoints the full serving state
 (transform + backend slab source arrays + re-rank originals + pending delta
 rows) through ``repro.checkpoint.ckpt``; ``FCVIEngine.restore(ckpt_dir,
@@ -108,6 +118,12 @@ def _batch_step(index: FCVIIndex, delta_vn, delta_fn, delta_flat, q, f,
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Serving-side knobs (all host-side policy; none change result values
+    except ``k``). ``router_nprobe`` only matters for ``routing="routed"``
+    flat serving: how many psi-clusters the shard router probes per query
+    (0 = auto, ~two shards' worth of clusters; smaller = more shards
+    skipped but more dense fallbacks)."""
+
     k: int = 10
     batch_size: int = 64
     cache_entries: int = 4096
@@ -116,20 +132,39 @@ class EngineConfig:
     kprime_escalation: int = 4     # stage-2 k' multiplier
     compact_threshold: int = 2048  # delta rows triggering compaction
     multi_probe_r: int = 4
+    router_nprobe: int = 0         # routed flat serving: probed psi-clusters
 
 
 @dataclasses.dataclass
 class EngineStats:
+    """Off-trace serving counters. The ``router_*``/``shard*`` fields are
+    only advanced by routed sharded engines: ``shard_steps`` counts
+    (batch x shard) slots dispatched, ``shards_active`` how many of those
+    actually ran candidate generation (the rest took the zero-work branch),
+    ``router_fallbacks`` how many queries were re-run dense because the
+    routed clipping bound could not certify exactness."""
+
     queries: int = 0
     cache_hits: int = 0
     escalations: int = 0
     inserts: int = 0
     compactions: int = 0
     total_time_s: float = 0.0
+    routed_batches: int = 0
+    router_fallbacks: int = 0
+    shards_active: int = 0
+    shard_steps: int = 0
 
     @property
     def qps(self) -> float:
         return self.queries / self.total_time_s if self.total_time_s else 0.0
+
+    @property
+    def shard_skip_rate(self) -> float:
+        """Fraction of (batch x shard) slots skipped by routing."""
+        if not self.shard_steps:
+            return 0.0
+        return 1.0 - self.shards_active / self.shard_steps
 
 
 @dataclasses.dataclass
@@ -142,8 +177,34 @@ class _DeltaBuffer:
 
 
 class FCVIEngine:
+    """Batched serving engine over one ``FCVIIndex``.
+
+    Core entry points (all take/return HOST numpy arrays):
+      * ``search(queries (n, d) fp32, filters (n, m) fp32)`` ->
+        (scores (n, k) fp32, ids (n, k) int64) — ids >= ``index.size`` are
+        un-compacted delta rows.
+      * ``insert(vectors (n, d), filters (n, m))`` — buffered in the delta
+        index until ``compact_threshold`` triggers compaction.
+      * ``save(dir)`` / ``FCVIEngine.restore(dir, mesh=...)`` — the elastic
+        checkpoint lifecycle (any target mesh).
+
+    Dispatch-changing knobs: the wrapped index's ``FCVIConfig.use_pallas``
+    (Pallas kernels vs jnp reference inside the step — identical results)
+    and ``storage_dtype`` (bf16 corpus slabs); the constructor's ``mesh``
+    (``None`` = single-device jitted step, a ``jax.sharding.Mesh`` = the
+    shard_map step from ``repro.serve.sharded``), ``placement``
+    ("contiguous" row order vs "cluster" filter-centric packing), and
+    ``routing`` ("dense" = every shard scans every batch, "routed" = shards
+    irrelevant to a query's psi-clusters/probed lists are masked and skip
+    their scan; requires a mesh, and ``placement="cluster"`` for the flat
+    backend). All four are pure deployment knobs: results are identical
+    across every combination (routed mode re-runs queries dense whenever its
+    clipping bound cannot certify exactness).
+    """
+
     def __init__(self, index: FCVIIndex, config: Optional[EngineConfig] = None,
-                 *, mesh=None, rules=None, placement: str = "contiguous"):
+                 *, mesh=None, rules=None, placement: str = "contiguous",
+                 routing: str = "dense", router_centers=None):
         self.index = index
         # default constructed per engine: a shared EngineConfig() default
         # instance would leak mutations across engines
@@ -154,6 +215,13 @@ class FCVIEngine:
         self._delta_f: list = []
         self._delta: Optional[_DeltaBuffer] = None
         self._mesh, self._rules, self._placement = mesh, rules, placement
+        if routing not in ("dense", "routed"):
+            raise ValueError(
+                f"routing must be 'dense' or 'routed', got {routing!r}")
+        if routing == "routed" and mesh is None:
+            raise ValueError("routing='routed' requires a device mesh")
+        self._routing = routing
+        self._router_centers = router_centers
         self._sharded = None
         self._sharded_delta = None
         if mesh is not None:
@@ -165,8 +233,15 @@ class FCVIEngine:
 
         self._sharded = ShardedServing(self.index, self._mesh,
                                        rules=self._rules,
-                                       placement=self._placement)
+                                       placement=self._placement,
+                                       routing=self._routing,
+                                       router_nprobe=self.cfg.router_nprobe,
+                                       router_centers=self._router_centers)
         self._sharded_delta = None
+
+    @property
+    def _routed(self) -> bool:
+        return self._sharded is not None and self._routing == "routed"
 
     # -- cache ------------------------------------------------------------
     def _cache_keys(self, queries: np.ndarray,
@@ -191,7 +266,11 @@ class FCVIEngine:
 
     # -- search -----------------------------------------------------------
     def search(self, queries: np.ndarray, filters: np.ndarray):
-        """queries: (n, d); filters: (n, m). Returns (scores, ids) (n, k)."""
+        """queries: (n, d) fp32; filters: (n, m) fp32 (raw, un-normalized).
+        Returns (scores (n, k) fp32, ids (n, k) int64); ids >= ``index.size``
+        refer to un-compacted delta inserts. In routed mode the cache-miss
+        queue is first sorted by router shard-group signature so co-routed
+        queries share a padded batch (and unprobed shards actually skip)."""
         t0 = time.perf_counter()
         n = queries.shape[0]
         k = self.cfg.k
@@ -208,14 +287,31 @@ class FCVIEngine:
             else:
                 todo.append(i)
 
+        if todo and self._routed:
+            # dispatch-layer regrouping: bucket the queue by shard-group
+            # signature so each padded batch touches as few shards as it can
+            sigs = self._sharded.route_signatures(queries[todo], filters[todo])
+            order = sorted(range(len(todo)), key=lambda j: sigs[j].tobytes())
+            todo = [todo[j] for j in order]
+
         bs = self.cfg.batch_size
         for s in range(0, len(todo), bs):
             idxs = todo[s:s + bs]
             pad = bs - len(idxs)
-            q = np.concatenate([queries[idxs],
-                                np.zeros((pad, queries.shape[1]), np.float32)])
-            f = np.concatenate([filters[idxs],
-                                np.zeros((pad, filters.shape[1]), np.float32)])
+            if pad and self._routed:
+                # pad with the last real query (not zeros): pad rows then
+                # route like an existing query instead of activating
+                # whatever shards the zero vector happens to map to
+                pq, pf = queries[idxs[-1:]], filters[idxs[-1:]]
+                q = np.concatenate([queries[idxs], np.repeat(pq, pad, 0)])
+                f = np.concatenate([filters[idxs], np.repeat(pf, pad, 0)])
+            else:
+                q = np.concatenate(
+                    [queries[idxs],
+                     np.zeros((pad, queries.shape[1]), np.float32)])
+                f = np.concatenate(
+                    [filters[idxs],
+                     np.zeros((pad, filters.shape[1]), np.float32)])
             qj, fj = jnp.asarray(q), jnp.asarray(f)
             scores, ids = self._run_batch(qj, fj, k, n_real=len(idxs))
             scores, ids = np.asarray(scores), np.asarray(ids)
@@ -231,13 +327,17 @@ class FCVIEngine:
         """One padded batch through the jitted step; escalation decided here
         (host-side bookkeeping), each stage a single compiled dispatch.
 
-        Stage 2 runs ONLY the escalated queries, gathered into a padded
+        Routed engines run the routed shard_map step first and re-run any
+        query whose clipping flag is set through the DENSE step (same k'), so
+        routed results always equal dense results end to end; the route mask
+        feeds the off-trace router stats. Stage-2 escalation (and the routed
+        fallback) runs ONLY the selected queries, gathered into a padded
         power-of-two sub-batch (so trace shapes stay bounded: one cached
         trace per bucket size) and scattered back — with the typical few-
-        percent escalation rate this makes stage 2 nearly free instead of
-        re-running the whole batch at ~4x k'. ``n_real`` caps escalation to
-        the real rows of a padded batch: zero-filler rows have data-dependent
-        margins and must not trigger (or count as) escalations.
+        percent rates this is nearly free instead of re-running the whole
+        batch. ``n_real`` caps both to the real rows of a padded batch:
+        filler rows have data-dependent margins/flags and must not trigger
+        (or count as) re-runs.
         """
         cfg = self.index.config
         alpha = cfg.resolved_alpha()
@@ -250,8 +350,28 @@ class FCVIEngine:
             kdp = theory.k_prime(k, cfg.lam, alpha, nd, cfg.c)
             kd = min(nd, max(kdp, 4 * k))
             dvn, dfn, dflat = delta.vn, delta.fn, delta.flat
-        scores, ids, margin = self._step(dvn, dfn, dflat, q, f,
-                                         k=k, kp=kp, kd=kd)
+        if self._routed:
+            scores, ids, margin, flag, rmask = self._sharded.step(
+                self._sharded_delta_view(dflat), q, f,
+                k=k, kp=kp, kd=kd, routed=True)
+            nr = q.shape[0] if n_real is None else n_real
+            rm = np.asarray(rmask)
+            self.stats.routed_batches += 1
+            self.stats.shard_steps += rm.shape[1]
+            self.stats.shards_active += int(rm.any(axis=0).sum())
+            need = np.asarray(flag)[:nr]
+            if need.any():
+                idxs = np.nonzero(need)[0]
+                self.stats.router_fallbacks += len(idxs)
+                s2, i2, m2 = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
+                                                  k=k, kp=kp, kd=kd)
+                take = jnp.asarray(idxs)
+                scores = scores.at[take].set(s2)
+                ids = ids.at[take].set(i2)
+                margin = margin.at[take].set(m2)
+        else:
+            scores, ids, margin = self._step(dvn, dfn, dflat, q, f,
+                                             k=k, kp=kp, kd=kd)
         need = np.asarray(margin < self.cfg.escalate_margin)
         if n_real is not None:
             need = need[:n_real]
@@ -260,31 +380,46 @@ class FCVIEngine:
             self.stats.escalations += len(idxs)
             kp2 = theory.k_prime(k, cfg.lam, alpha, self.index.size,
                                  cfg.c * self.cfg.kprime_escalation)
-            nb = q.shape[0]
-            while nb // 2 >= max(len(idxs), 1):
-                nb //= 2
-            sel = np.zeros((nb,), np.int64)
-            sel[: len(idxs)] = idxs            # pad slots recompute query 0
-            sel_j = jnp.asarray(sel)
-            s2, i2, _ = self._step(dvn, dfn, dflat,
-                                   q[sel_j], f[sel_j], k=k, kp=kp2, kd=kd)
+            s2, i2, _ = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
+                                             k=k, kp=kp2, kd=kd)
             take = jnp.asarray(idxs)
-            scores = scores.at[take].set(s2[: len(idxs)])
-            ids = ids.at[take].set(i2[: len(idxs)])
+            scores = scores.at[take].set(s2)
+            ids = ids.at[take].set(i2)
         return scores, ids
+
+    def _dense_subbatch(self, dvn, dfn, dflat, q, f, idxs, *,
+                        k: int, kp: int, kd: int):
+        """Re-run ``idxs`` (row indices into the padded batch) through the
+        dense step in a padded power-of-two sub-batch; pad slots recompute
+        query 0. Returns the (scores, ids, margin) rows for ``idxs``."""
+        nb = q.shape[0]
+        while nb // 2 >= max(len(idxs), 1):
+            nb //= 2
+        sel = np.zeros((nb,), np.int64)
+        sel[: len(idxs)] = idxs
+        sel_j = jnp.asarray(sel)
+        s2, i2, m2 = self._step(dvn, dfn, dflat, q[sel_j], f[sel_j],
+                                k=k, kp=kp, kd=kd)
+        n = len(idxs)
+        return s2[:n], i2[:n], m2[:n]
+
+    def _sharded_delta_view(self, dflat):
+        """Lazily (re)shard the delta buffer for the shard_map steps."""
+        if dflat is None:
+            return None
+        if self._sharded_delta is None:
+            self._sharded_delta = self._sharded.shard_delta(self._delta)
+        return self._sharded_delta
 
     def _step(self, dvn, dfn, dflat, q, f, *, k: int, kp: int, kd: int):
         """Dispatch one padded batch to the single-device jitted step or the
-        mesh-sharded shard_map step (identical results by construction)."""
+        mesh-sharded DENSE shard_map step (identical results by
+        construction; the routed step is dispatched by ``_run_batch``)."""
         if self._sharded is None:
             return _batch_step(self.index, dvn, dfn, dflat, q, f,
                                k=k, kp=kp, kd=kd)
-        sdelta = None
-        if dflat is not None:
-            if self._sharded_delta is None:
-                self._sharded_delta = self._sharded.shard_delta(self._delta)
-            sdelta = self._sharded_delta
-        return self._sharded.step(sdelta, q, f, k=k, kp=kp, kd=kd)
+        return self._sharded.step(self._sharded_delta_view(dflat), q, f,
+                                  k=k, kp=kp, kd=kd)
 
     def _staged_query(self, q, f, k):
         """Pre-jit two-stage query WITHOUT the delta merge — kept as the
@@ -350,6 +485,7 @@ class FCVIEngine:
         self._delta_v, self._delta_f = [], []
         self._delta = None
         self._sharded_delta = None
+        self._router_centers = None  # corpus changed: re-derive the router
         if self._sharded is not None:
             self._build_sharded()   # re-shard the grown slabs onto the mesh
         self.stats.compactions += 1
@@ -362,8 +498,12 @@ class FCVIEngine:
         Saves the transform + backend source arrays + re-rank originals via
         ``fcvi.index_state`` (derived serving slabs are rebuilt at restore
         time by the slab layer) plus any PENDING delta rows, with the static
-        configs in the manifest metadata. Sharded arrays are gathered to host
-        transparently by the checkpoint writer.
+        configs — including the serving placement/routing knobs — in the
+        manifest metadata. Cluster-placed flat engines also save the router's
+        psi-cluster centers ((ncl, d) fp32) so a restored engine derives the
+        SAME routing tables (labels, radii, shard incidence) on any target
+        mesh instead of re-running k-means. Sharded arrays are gathered to
+        host transparently by the checkpoint writer.
         """
         d = self.index.transform.vec_norm.mean.shape[-1]
         m = self.index.transform.filt_norm.mean.shape[-1]
@@ -373,9 +513,16 @@ class FCVIEngine:
               else np.zeros((0, m), np.float32))
         tree = {"index": fcvi.index_state(self.index),
                 "delta_v": dv, "delta_f": df}
+        if (self._sharded is not None
+                and getattr(self._sharded.slab, "router_centers", None)
+                is not None):
+            tree["router"] = {
+                "centers": np.asarray(self._sharded.slab.router_centers)}
         metadata = {
             "fcvi_config": dataclasses.asdict(self.index.config),
             "engine_config": dataclasses.asdict(self.cfg),
+            "serving": {"placement": self._placement,
+                        "routing": self._routing},
         }
         return ckpt_mod.save(ckpt_dir, step, tree, metadata=metadata,
                              keep=keep)
@@ -383,7 +530,8 @@ class FCVIEngine:
     @classmethod
     def restore(cls, ckpt_dir: str, *, step: Optional[int] = None,
                 config: Optional[EngineConfig] = None, mesh=None, rules=None,
-                placement: str = "contiguous") -> "FCVIEngine":
+                placement: Optional[str] = None,
+                routing: Optional[str] = None) -> "FCVIEngine":
         """Restore an engine from a checkpoint onto ANY target mesh.
 
         The elastic-restart path: arrays come back replicated on host, the
@@ -391,13 +539,29 @@ class FCVIEngine:
         checkpoint), and — when ``mesh`` is given — the slab layer re-lays
         the serving state out over the TARGET mesh, which may have a
         different shape than the mesh the checkpoint was written from.
+        ``placement``/``routing`` default to the values the engine was saved
+        with (pass explicitly to override); saved router centers are reused,
+        so a routed engine restored onto any mesh routes from the same
+        psi-cluster geometry it served with. ``mesh=None`` always serves the
+        single-device step (routing needs shards to skip).
         """
         tree, _, metadata = ckpt_mod.load(ckpt_dir, step=step)
         fcfg = FCVIConfig(**metadata["fcvi_config"])
         index = fcvi.index_from_state(fcfg, tree["index"])
         ecfg = (config if config is not None
                 else EngineConfig(**metadata["engine_config"]))
-        eng = cls(index, ecfg, mesh=mesh, rules=rules, placement=placement)
+        serving = metadata.get("serving", {})
+        if placement is None:
+            placement = serving.get("placement", "contiguous")
+        if routing is None:
+            routing = serving.get("routing", "dense")
+        if mesh is None:
+            routing = "dense"
+        centers = None
+        if "router" in tree:
+            centers = jnp.asarray(tree["router"]["centers"], jnp.float32)
+        eng = cls(index, ecfg, mesh=mesh, rules=rules, placement=placement,
+                  routing=routing, router_centers=centers)
         if tree["delta_v"].shape[0]:
             eng._delta_v = [np.asarray(tree["delta_v"], np.float32)]
             eng._delta_f = [np.asarray(tree["delta_f"], np.float32)]

@@ -29,6 +29,35 @@ per-shard top-min(k', local) + exact tree merge loses nothing), and the
 exact-refine / re-rank stages run on the same fp32 values.
 ``tests/test_sharded_engine.py`` enforces this on a forced 8-device host
 mesh, kernels on and off.
+
+Routed serving (``routing="routed"``): with filter-centric placement the
+psi-transform makes filtered queries geometrically LOCAL — a query's
+candidates concentrate on the few shards holding its nearby psi-clusters —
+so the step additionally computes a per-query shard relevance mask IN-TRACE
+and shards no query in the batch routes to skip candidate generation
+entirely (the local scan runs inside a ``lax.cond``; the skipped branch
+emits ``-inf`` candidates without touching the corpus slab):
+
+  * IVF: a probed list is wholly owned by one shard
+    (``ShardedIVFSlab.list_to_shard``), so masking shards that own none of a
+    query's probed lists is EXACT — routed results equal dense-sharded
+    results by construction, always.
+  * flat (requires ``placement="cluster"``): the router probes the
+    ``router_nprobe`` nearest psi-cluster centers and activates the shards
+    holding their rows (``cluster_to_shard``). This can clip the dense
+    top-k', so the step also emits a per-query soundness flag from the ball
+    bound ||q - x|| >= ||q - mu_c|| - r_c over all clusters with rows on
+    non-activated shards: if no clipped row can reach the k'-th routed
+    candidate score, routed == dense bit-exactly; otherwise the engine
+    re-runs the flagged queries through the dense step (the same sub-batch
+    machinery as k' escalation), so end-to-end results stay identical.
+
+The routed step returns two extra outputs — the flag and the (b, n_shards)
+route mask — that the engine consumes OFF-trace for the fallback decision
+and the router stats counters. ``route_signatures`` exposes the same router
+rule host-side so the dispatch layer can sort a batch by shard-group
+signature (co-routed queries land in the same padded batch, which is what
+lets a shard's ``lax.cond`` actually skip).
 """
 from __future__ import annotations
 
@@ -37,6 +66,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -44,20 +74,20 @@ from repro.compat import shard_map
 from repro.core import fcvi
 from repro.index import flat as flat_mod
 from repro.index import slab as slab_mod
-from repro.index.distributed import tree_merge_topk
+from repro.index.distributed import linear_shard_index, tree_merge_topk
 from repro.kernels import ops
 
 Array = jax.Array
 
-
-def _linear_shard_index(axes, sizes):
-    """This device's linear shard index over the (row-major) product axes."""
-    lin = jnp.int32(0)
-    stride = 1
-    for ax, n_ax in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
-        lin = lin + jax.lax.axis_index(ax) * stride
-        stride = stride * n_ax
-    return lin
+# safety margin on the routed clipping check: the ball bound is exact in real
+# arithmetic, but center distances / radii / refined candidate scores each
+# carry ~1e-7-relative fp32 rounding. Scores are squared distances whose
+# magnitude scales with the corpus, so the slack combines an absolute floor
+# with a relative term (~100x fp32 eps) — conservative both near zero and on
+# large-magnitude corpora (a few spurious dense fallbacks, never a missed
+# one).
+ROUTER_EPS = 1e-3
+ROUTER_RTOL = 1e-5
 
 
 def _gather_rows(local_rows: Array, gids: Array, lin, n_local: int, axes):
@@ -101,6 +131,40 @@ def _local_flat_topk(vectors: Array, sq_norms: Array, row_ids: Array,
     return vals, row_ids[idx]
 
 
+def _flat_router(q_t: Array, centers: Array, radii: Array, incidence: Array,
+                 router_nprobe: int):
+    """Per-query shard mask + clipping bound for cluster-placed flat slabs.
+
+    q_t: (b, d) transformed queries; centers (ncl, d), radii (ncl,),
+    incidence (ncl, ns) — the slab's routing tables. Probes the
+    ``router_nprobe`` nearest psi-clusters per query and activates every
+    shard holding rows of a probed cluster. Returns (route_mask (b, ns) bool,
+    bound (b,)): ``bound`` is the best score (negative squared L2) any row on
+    a NON-activated shard could reach, from the triangle-inequality ball
+    bound ||q - x|| >= ||q - mu_c|| - r_c; the step compares it against the
+    k'-th routed candidate to decide whether routing may have clipped.
+    """
+    ncl = centers.shape[0]
+    r = min(router_nprobe, ncl)
+    # exact (non-expanded) center distances: the bound must never be
+    # underestimated, so avoid the matmul expansion's cancellation error
+    d2 = jnp.sum(jnp.square(q_t[:, None, :] - centers[None]), axis=-1)
+    _, probe = jax.lax.top_k(-d2, r)
+    probed = jnp.clip(
+        jnp.sum(jax.nn.one_hot(probe, ncl, dtype=jnp.float32), axis=1),
+        0.0, 1.0)                                            # (b, ncl)
+    route_mask = (probed @ incidence) > 0.0                  # (b, ns)
+    # clusters with at least one row on a non-activated shard may be clipped;
+    # probed clusters never qualify (they activate all their shards)
+    inactive = 1.0 - route_mask.astype(jnp.float32)
+    clipped = (inactive @ incidence.T) > 0.0                 # (b, ncl)
+    has_rows = jnp.sum(incidence, axis=-1) > 0.0             # (ncl,)
+    ub = -jnp.square(jnp.maximum(jnp.sqrt(d2) - radii[None, :], 0.0))
+    bound = jnp.max(
+        jnp.where(clipped & has_rows[None, :], ub, -jnp.inf), axis=-1)
+    return route_mask, bound
+
+
 @dataclasses.dataclass
 class ShardedDelta:
     """Per-shard view of the engine's delta insert buffer (row-sharded)."""
@@ -119,25 +183,43 @@ class ShardedServing:
 
     Construction shards the serving state once (``slab.shard`` +
     row-sharding the re-rank originals); ``step`` lazily builds and caches
-    one jitted shard_map per static (k, k', kd, delta-shape) signature —
-    exactly mirroring the jit cache structure of the single-device
-    ``_batch_step``.
+    one jitted shard_map per static (k, k', kd, delta-shape, routed)
+    signature — exactly mirroring the jit cache structure of the
+    single-device ``_batch_step``. ``routing="routed"`` enables the
+    filter-routed step (see module docstring); on the flat backend it
+    requires ``placement="cluster"``, and ``router_centers`` optionally pins
+    the psi-cluster geometry (e.g. restored from a checkpoint so a restored
+    engine routes identically).
     """
 
     def __init__(self, index, mesh, rules=None, *,
-                 placement: str = "contiguous"):
+                 placement: str = "contiguous", routing: str = "dense",
+                 router_nprobe: int = 0,
+                 router_centers: Optional[Array] = None):
         from repro.distributed.sharding import AxisRules
 
+        if routing not in ("dense", "routed"):
+            raise ValueError(
+                f"routing must be 'dense' or 'routed', got {routing!r}")
         self.index = index
         self.mesh = mesh
         self.rules = rules if rules is not None else AxisRules(mesh)
         self.placement = placement
+        self.routing = routing
         cfg = index.config
         if cfg.backend == "flat":
+            if routing == "routed" and placement != "cluster":
+                raise ValueError(
+                    "routing='routed' on the flat backend requires "
+                    "placement='cluster': the router needs the psi-cluster "
+                    "ownership tables of filter-centric placement")
             self.slab = index.backend.slab().shard(
-                mesh, self.rules, placement=placement)
+                mesh, self.rules, placement=placement, centers=router_centers)
         elif cfg.backend == "ivf":
-            ivf_placement = "balanced" if placement == "cluster" else placement
+            # "cluster" = filter-centric placement: affinity packing keeps a
+            # query's co-probed lists on few shards (routing locality), where
+            # plain "balanced" packing scatters them by load alone
+            ivf_placement = "affinity" if placement == "cluster" else placement
             self.slab = index.backend.slab().shard(
                 mesh, self.rules, placement=ivf_placement,
                 list_sizes=index.backend.list_sizes)
@@ -148,6 +230,17 @@ class ShardedServing:
         self.axes = self.slab.axes
         self.sizes = tuple(mesh.shape[a] for a in self.axes)
         self.n_shards = slab_mod.axes_size(mesh, self.axes)
+        # resolved flat-router probe count: default to ~two shards' worth of
+        # psi-clusters — enough coverage that the clipping bound usually
+        # certifies (few dense fallbacks) while localized filtered traffic
+        # still leaves most shards unprobed
+        if cfg.backend == "flat" and self.slab.router_centers is not None:
+            ncl = self.slab.router_centers.shape[0]
+            self.router_nprobe = (router_nprobe if router_nprobe > 0
+                                  else max(1, (2 * ncl) // max(self.n_shards,
+                                                               1)))
+        else:
+            self.router_nprobe = max(router_nprobe, 1)
         # normalized originals, contiguously row-sharded for the distributed
         # re-rank gather (independent of the slab's candidate placement)
         n = index.size
@@ -182,17 +275,70 @@ class ShardedServing:
             nd=nd, n_local=nl,
         )
 
+    # -- dispatch-layer routing -------------------------------------------
+    def route_signatures(self, q: np.ndarray, f: np.ndarray) -> np.ndarray:
+        """Per-query active-shard bitmasks for dispatch-layer regrouping.
+
+        q: (n, d) fp32 raw queries; f: (n, m) fp32 raw filter targets.
+        Returns (n, ceil(n_shards/8)) uint8 packed bits (bit s set = the
+        query routes to shard s), computed host-side with the same router
+        rule the jitted routed step applies in-trace. Sorting a dispatch
+        queue by signature groups co-routed queries into the same padded
+        batch, which is what lets a shard's ``lax.cond`` skip fire.
+        """
+        idx = self.index
+        cfg = idx.config
+        qn, fqn = idx.transform.normalize(jnp.asarray(q), jnp.asarray(f))
+        q_t = np.asarray(idx.transform.apply_normalized(qn, fqn), np.float32)
+        n = q_t.shape[0]
+        ns = self.n_shards
+        mask = np.ones((n, ns), bool)
+        # chunked, with the SAME distance formula and top-k tie-breaking as
+        # the corresponding in-trace router (flat: exact diff; IVF jnp
+        # coarse quantizer: matmul expansion), so the predicted signatures
+        # match the step's route mask. The Pallas coarse kernel may break
+        # exact centroid ties differently — grouping is best-effort there.
+        chunk = 256   # bounds the flat (chunk, ncl, d) diff temporary
+        if cfg.backend == "flat" and self.slab.router_centers is not None:
+            c = np.asarray(self.slab.router_centers, np.float32)
+            inc = np.asarray(self.slab.cluster_to_shard, np.float32)
+            r = min(self.router_nprobe, c.shape[0])
+            for s in range(0, n, chunk):
+                qc = q_t[s:s + chunk]
+                d2 = np.sum((qc[:, None, :] - c[None]) ** 2, axis=-1)
+                probe = np.asarray(jax.lax.top_k(jnp.asarray(-d2), r)[1])
+                probed = np.zeros((qc.shape[0], c.shape[0]), np.float32)
+                probed[np.arange(qc.shape[0])[:, None], probe] = 1.0
+                mask[s:s + chunk] = (probed @ inc) > 0.0
+        elif cfg.backend == "ivf":
+            c = np.asarray(self.slab.centroids, np.float32)
+            c2 = np.asarray(self.slab.c_sq, np.float32)
+            nprobe = min(cfg.nprobe, self.slab.nlist)
+            l2s = np.asarray(self.slab.list_to_shard)
+            for s in range(0, n, chunk):
+                qc = q_t[s:s + chunk]
+                q2 = np.sum(qc * qc, axis=-1, keepdims=True)
+                cd = -(q2 - 2.0 * qc @ c.T + c2[None, :])
+                probe = np.asarray(jax.lax.top_k(jnp.asarray(cd), nprobe)[1])
+                m = np.zeros((qc.shape[0], ns), bool)
+                m[np.arange(qc.shape[0])[:, None], l2s[probe]] = True
+                mask[s:s + chunk] = m
+        return np.packbits(mask, axis=1)
+
     # -- the sharded batch step -------------------------------------------
     def step(self, delta: Optional[ShardedDelta], q: Array, f: Array, *,
-             k: int, kp: int, kd: int):
+             k: int, kp: int, kd: int, routed: bool = False):
         """One padded batch through the sharded hot path; same contract as
-        ``engine._batch_step``: (scores (b, k), ids (b, k), margin (b,))."""
+        ``engine._batch_step``: (scores (b, k), ids (b, k), margin (b,)).
+        With ``routed=True`` two extra outputs follow: the per-query clipping
+        flag (b,) bool (True = routing may have clipped the dense top-k';
+        re-run dense) and the route mask (b, n_shards) bool."""
         nld = None if delta is None else delta.n_local
-        key = (k, kp, kd, nld)
+        key = (k, kp, kd, nld, routed)
         fn = self._steps.get(key)
         if fn is None:
-            fn = self._steps[key] = self._build_step(k, kp, kd, nld)
-        slab_args = self._slab_args()
+            fn = self._steps[key] = self._build_step(k, kp, kd, nld, routed)
+        slab_args = self._slab_args(routed)
         if delta is None:
             return fn(self.index.transform, *slab_args, self.vectors_n,
                       self.filters_n, q, f)
@@ -200,29 +346,44 @@ class ShardedServing:
                   self.filters_n, delta.vt, delta.sq, delta.row_ids,
                   delta.vn, delta.fn, q, f)
 
-    def _slab_args(self):
+    def _has_flat_router(self) -> bool:
+        return (self.index.config.backend == "flat"
+                and self.slab.router_centers is not None)
+
+    def _slab_args(self, routed: bool = False):
         s = self.slab
         if self.index.config.backend == "flat":
-            return (s.vectors, s.sq_norms, s.row_ids)
+            base = (s.vectors, s.sq_norms, s.row_ids)
+            if routed and self._has_flat_router():
+                base = base + (s.router_centers, s.router_radii,
+                               s.cluster_to_shard)
+            return base
         return (s.grouped, s.grouped_sq, s.valid, s.lists, s.centroids,
                 s.c_sq, s.slot_of_list)
 
-    def _slab_specs(self, row):
+    def _slab_specs(self, row, routed: bool = False):
         if self.index.config.backend == "flat":
-            return (row, row, row)
+            base = (row, row, row)
+            if routed and self._has_flat_router():
+                base = base + (P(), P(), P())   # routing tables: replicated
+            return base
         # grouped layouts are list-sharded; centroid state is replicated
         return (row, row, row, row, P(), P(), P())
 
-    def _build_step(self, k: int, kp: int, kd: int, nld: Optional[int]):
+    def _build_step(self, k: int, kp: int, kd: int, nld: Optional[int],
+                    routed: bool):
         from repro.serve import engine as engine_mod
 
         cfg = self.index.config
         axes, sizes = self.axes, self.sizes
+        ns = self.n_shards
         use_pallas = cfg.use_pallas
         backend = cfg.backend
         rows_local = self.rows_local
         index_size = self.index.size
         has_delta = nld is not None
+        has_router = self._has_flat_router()
+        router_np = self.router_nprobe
         if backend == "flat":
             kl = min(kp, self.slab.n_local)
         else:
@@ -231,21 +392,25 @@ class ShardedServing:
             max_list = self.slab.max_list
             kl_ivf = min(kp, nprobe * max_list)
 
-        def flat_candidates(slab_args, q_t, lin):
-            vectors, sq_norms, row_ids = slab_args
+        def flat_scan(slab_args, q_t):
+            vectors, sq_norms, row_ids = slab_args[:3]
             return _local_flat_topk(vectors, sq_norms, row_ids, q_t, kl,
                                     use_pallas)
 
-        def ivf_candidates(slab_args, q_t, lin):
-            grouped, grouped_sq, valid, lists, c, c2, slot_of = slab_args
-            q2 = jnp.sum(q_t * q_t, axis=-1, keepdims=True)
+        def ivf_probe(slab_args, q_t, q2):
             # coarse quantizer: replicated, identical to the single-device
             # path (centroid scoring is just a tiny flat search)
+            c, c2 = slab_args[4], slab_args[5]
             if use_pallas:
                 _, probe = ops.score_topk_padded(c, c2, q_t, nprobe)
             else:
                 cd = -(q2 - 2.0 * q_t @ c.T + c2[None, :])
                 _, probe = jax.lax.top_k(cd, nprobe)
+            return probe
+
+        def ivf_scan(slab_args, q_t, q2, probe, lin):
+            grouped, grouped_sq, valid, lists = slab_args[:4]
+            slot_of = slab_args[6]
             slot = slot_of[probe]                          # (b, nprobe)
             mine = (slot // lpp) == lin
             # non-local probes go to this shard's all-invalid sentinel slot
@@ -269,9 +434,8 @@ class ShardedServing:
 
             return jax.vmap(one_query)(q_t, q2[:, 0], local)
 
-        local_candidates = (flat_candidates if backend == "flat"
-                            else ivf_candidates)
-        n_slab_args = 3 if backend == "flat" else 7
+        n_slab_args = 7 if backend == "ivf" else (
+            6 if routed and has_router else 3)
 
         def body(tfm, *args):
             engine_mod._TRACE_COUNT[0] += 1
@@ -281,12 +445,72 @@ class ShardedServing:
                 vn_l, fn_l, dvt, dsq, dids, dvn, dfn, q, f = rest
             else:
                 vn_l, fn_l, q, f = rest
-            lin = _linear_shard_index(axes, sizes)
+            lin = linear_shard_index(axes, sizes)
             qn, fqn = tfm.normalize(q, f)
             q_t = tfm.apply_normalized(qn, fqn, use_pallas=use_pallas)
+            b = q.shape[0]
 
-            vals, gids = local_candidates(slab_args, q_t, lin)
+            route_mask = bound = None
+            if backend == "flat":
+                if routed and has_router:
+                    rc, rr, inc = slab_args[3:6]
+                    route_mask, bound = _flat_router(q_t, rc, rr, inc,
+                                                     router_np)
+                    mine_q = jnp.take(route_mask, lin, axis=1)   # (b,)
+
+                    def scan(_):
+                        v, g = flat_scan(slab_args, q_t)
+                        return jnp.where(mine_q[:, None], v, -jnp.inf), g
+
+                    def skip(_):
+                        return (jnp.full((b, kl), -jnp.inf, jnp.float32),
+                                jnp.zeros((b, kl), jnp.int32))
+
+                    vals, gids = jax.lax.cond(jnp.any(mine_q), scan, skip,
+                                              None)
+                else:
+                    vals, gids = flat_scan(slab_args, q_t)
+                    if routed:   # 1-shard mesh: routing is a no-op
+                        route_mask = jnp.ones((b, ns), bool)
+            else:
+                q2 = jnp.sum(q_t * q_t, axis=-1, keepdims=True)
+                probe = ivf_probe(slab_args, q_t, q2)
+                if routed:
+                    # a probed list is wholly owned by one shard, so the mask
+                    # is exact: masked shards cannot hold any candidate
+                    shard_of = slab_args[6][probe] // lpp      # (b, nprobe)
+                    route_mask = jnp.any(
+                        shard_of[:, :, None] == jnp.arange(ns)[None, None, :],
+                        axis=1)                                # (b, ns)
+                    mine_q = jnp.take(route_mask, lin, axis=1)
+
+                    def scan(_):
+                        return ivf_scan(slab_args, q_t, q2, probe, lin)
+
+                    def skip(_):
+                        return (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
+                                jnp.full((b, kl_ivf), -1, jnp.int32))
+
+                    vals, gids = jax.lax.cond(jnp.any(mine_q), scan, skip,
+                                              None)
+                else:
+                    vals, gids = ivf_scan(slab_args, q_t, q2, probe, lin)
+
             vals, gids = tree_merge_topk(vals, gids, axes, sizes, kp)
+            if routed:
+                if backend == "flat" and has_router:
+                    # may routing have clipped the dense top-k'? A -inf
+                    # k'-th value (routed pool could not even fill k') makes
+                    # the slack infinite and always flags, as it must — a
+                    # masked shard might have filled it.
+                    kth = vals[:, -1]
+                    tol = ROUTER_EPS + ROUTER_RTOL * jnp.abs(kth)
+                    flag = bound >= kth - tol
+                else:
+                    # IVF routing (and the 1-shard flat no-op) is exact by
+                    # construction: masked shards own none of the probed
+                    # lists, so even an underfilled pool matches dense
+                    flag = jnp.zeros((b,), bool)
             # mirror the single-device id convention for unfillable rows
             gids = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(gids, 0))
 
@@ -313,13 +537,16 @@ class ShardedServing:
                                                   did.astype(ids.dtype), k)
 
             margin = scores[:, 0] - scores[:, -1]
+            if routed:
+                return scores, ids, margin, flag, route_mask
             return scores, ids, margin
 
         row = P(axes)
-        specs = (P(),) + self._slab_specs(row) + (row, row)
+        specs = (P(),) + self._slab_specs(row, routed) + (row, row)
         if has_delta:
             specs = specs + (row, row, row, row, row)
         specs = specs + (P(), P())
+        n_out = 5 if routed else 3
         mapped = shard_map(body, mesh=self.mesh, in_specs=specs,
-                           out_specs=(P(), P(), P()), check_vma=False)
+                           out_specs=(P(),) * n_out, check_vma=False)
         return jax.jit(mapped)

@@ -1,0 +1,345 @@
+"""Routed sharded serving: parity with dense serving + routing machinery.
+
+The contract under test: ``routing="routed"`` is a pure deployment knob —
+for any mesh, flat (cluster placement) or IVF, kernels on or off, with or
+without a live delta buffer, a routed engine returns top-k ids and scores
+IDENTICAL to the dense-sharded engine (and therefore to the meshless one).
+IVF routing is exact by construction (probed lists are wholly owned);
+flat routing is certified per query by the ball-bound clipping check, with
+flagged queries transparently re-run dense. Also covered: the routing
+tables' checkpoint round-trip (save on 8 devices, restore on 2), router
+edge cases (all probes on one shard; filters matching no cluster), the
+placement/affinity layout invariants, and no-retrace steady state.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FCVIConfig, build
+from repro.launch.mesh import make_mesh
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.index.distributed import affinity_group_layout
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    return corpus, np.asarray(q), np.asarray(fq)
+
+
+def _assert_identical(a, b):
+    (s0, i0), (s1, i1) = a, b
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# ---------------------------------------------------------------------------
+# Fast in-process cases (1-device mesh + host-side layout/validation logic)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_routed_one_device_mesh_identical(data, backend):
+    """On a 1-shard mesh routing is a no-op and must stay bit-identical to
+    the meshless engine, including the trivial route-mask/flag outputs."""
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=16,
+                     nprobe=4)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    ek = dict(k=5, batch_size=16)
+    e0 = FCVIEngine(idx, EngineConfig(**ek))
+    e1 = FCVIEngine(idx, EngineConfig(**ek),
+                    mesh=make_mesh((1, 1), ("data", "model")),
+                    placement="cluster", routing="routed")
+    _assert_identical(e0.search(q, fq), e1.search(q, fq))
+    assert e1.stats.routed_batches > 0
+    assert e1.stats.shard_skip_rate == 0.0      # one shard: nothing to skip
+
+
+def test_routed_requires_mesh_and_cluster_placement(data):
+    corpus, _, _ = data
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(backend="flat"))
+    with pytest.raises(ValueError, match="requires a device mesh"):
+        FCVIEngine(idx, routing="routed")
+    with pytest.raises(ValueError, match="placement='cluster'"):
+        FCVIEngine(idx, mesh=make_mesh((1, 1), ("data", "model")),
+                   routing="routed", placement="contiguous")
+    with pytest.raises(ValueError, match="routing must be"):
+        FCVIEngine(idx, mesh=make_mesh((1, 1), ("data", "model")),
+                   routing="sideways")
+
+
+def test_affinity_group_layout_invariants():
+    """Affinity packing respects slot capacity, assigns every group exactly
+    once, and co-locates nearby groups (two well-separated blobs of group
+    centers must not share shards more than the balance caps force)."""
+    r = np.random.default_rng(0)
+    blob_a = r.normal(size=(12, 8)).astype(np.float32)
+    blob_b = r.normal(size=(12, 8)).astype(np.float32) + 50.0
+    centers = np.concatenate([blob_a, blob_b])
+    sizes = np.full((24,), 10, np.int64)
+    shard_of = affinity_group_layout(centers, sizes, 4, slot_capacity=6)
+    assert shard_of.shape == (24,) and (shard_of < 4).all()
+    assert (np.bincount(shard_of, minlength=4) <= 6).all()
+    # groups of one blob never share a shard with the other blob's groups
+    shards_a = set(shard_of[:12].tolist())
+    shards_b = set(shard_of[12:].tolist())
+    assert not (shards_a & shards_b)
+
+
+def test_affinity_layout_degenerate_shapes():
+    """Fewer groups than shards and 1-shard meshes stay total."""
+    c = np.random.default_rng(1).normal(size=(3, 4)).astype(np.float32)
+    s = np.asarray([5, 1, 2])
+    assert (affinity_group_layout(c, s, 1) == 0).all()
+    a = affinity_group_layout(c, s, 8)
+    assert len(set(a.tolist())) == 3          # one group per shard
+
+
+def test_one_shard_cluster_slab_has_no_router_tables(data):
+    """The 1-shard degenerate case of cluster placement must not fabricate
+    routing tables (the routed step then takes its trivial no-op branch)."""
+    corpus, _, _ = data
+    from repro.distributed.sharding import AxisRules
+
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(backend="flat"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    slab = idx.backend.slab().shard(mesh, AxisRules(mesh),
+                                    placement="cluster")
+    assert slab.router_centers is None and slab.cluster_to_shard is None
+
+
+# ---------------------------------------------------------------------------
+# Multi-shard cases (subprocess with 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_PRELUDE = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import EngineConfig, FCVIEngine
+
+    assert len(jax.devices()) == 8
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    q, fq = np.asarray(q), np.asarray(fq)
+    mesh = make_mesh((8, 1), ("data", "model"))
+
+    def engines(backend, use_pallas, routing="routed", **ekw):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4, use_pallas=use_pallas)
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        ek = dict(k=5, batch_size=16, compact_threshold=256)
+        ek.update(ekw)
+        return (FCVIEngine(idx, EngineConfig(**ek)),
+                FCVIEngine(idx, EngineConfig(**ek), mesh=mesh,
+                           placement="cluster", routing="dense"),
+                FCVIEngine(idx, EngineConfig(**ek), mesh=mesh,
+                           placement="cluster", routing=routing))
+
+    def check(a, b, tag):
+        (s0, i0), (s1, i1) = a, b
+        assert (np.asarray(i0) == np.asarray(i1)).all(), tag
+        assert (np.asarray(s0) == np.asarray(s1)).all(), tag
+"""
+
+
+@pytest.mark.slow
+def test_routed_eight_device_parity():
+    """Acceptance: routed results on a forced 8-device mesh equal the dense-
+    sharded AND meshless results exactly — flat + IVF, kernels on/off, with
+    a live delta buffer, escalation fallback exercised."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    r = np.random.default_rng(0)
+    nv = r.normal(size=(20, spec.d)).astype(np.float32)
+    nf = corpus.filters[:20].copy()
+
+    # routing-table soundness: every corpus row's ACTUAL shard appears in
+    # its cluster's incidence row (the precondition of the clipping bound)
+    from repro.core.clustering import assign
+    _, _, er0 = engines("flat", False)
+    slab = er0._sharded.slab
+    labels = np.asarray(assign(
+        jnp.asarray(er0.index.backend.vectors, jnp.float32),
+        slab.router_centers))
+    row_ids = np.asarray(slab.row_ids)          # slab order -> corpus id
+    inc = np.asarray(slab.cluster_to_shard)
+    for pos in range(len(row_ids)):
+        cid = row_ids[pos]
+        if cid < 0:
+            continue
+        assert inc[labels[cid], pos // slab.n_local] == 1.0, pos
+
+    total_fallbacks = 0
+    for backend in ("flat", "ivf"):
+        for use_pallas in (False, True):
+            e0, ed, er = engines(backend, use_pallas)
+            assert er._sharded.n_shards == 8
+            a, b, c = e0.search(q, fq), ed.search(q, fq), er.search(q, fq)
+            check(a, c, (backend, use_pallas, "routed-vs-meshless"))
+            check(b, c, (backend, use_pallas, "routed-vs-dense"))
+            e0.insert(nv, nf); ed.insert(nv, nf); er.insert(nv, nf)
+            for e in (e0, ed, er): e._cache.clear()
+            check(e0.search(q, fq), er.search(q, fq),
+                  (backend, use_pallas, "delta"))
+            assert er.stats.routed_batches > 0
+            total_fallbacks += er.stats.router_fallbacks
+            assert er.stats.router_fallbacks == 0 or backend == "flat"
+    # the flat clipping bound must actually fire somewhere on this tiny
+    # corpus (k' ~ corpus scale), proving the dense fallback path ran
+    assert total_fallbacks > 0
+
+    # two-axis mesh: the router's shard linearization must agree with the
+    # slab layout when the corpus axes span a 4x2 mesh
+    from repro.distributed.sharding import AxisRules
+    mesh42 = make_mesh((4, 2), ("data", "model"))
+    rules = AxisRules(mesh42, {"corpus": ("data", "model"),
+                               "ivf_lists": ("data", "model")})
+    for backend in ("flat", "ivf"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4)
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        e0 = FCVIEngine(idx, EngineConfig(k=5, batch_size=16))
+        er = FCVIEngine(idx, EngineConfig(k=5, batch_size=16), mesh=mesh42,
+                        rules=rules, placement="cluster", routing="routed")
+        assert er._sharded.n_shards == 8 and len(er._sharded.axes) == 2
+        check(e0.search(q, fq), er.search(q, fq), (backend, "4x2-routed"))
+    print("routed 8-device parity OK, fallbacks:", total_fallbacks)
+    """)
+
+
+@pytest.mark.slow
+def test_routed_fallback_forced_and_exact():
+    """Queries placed midway between psi-clusters with an aggressive router
+    (router_nprobe=1) force the clipping flag — results must STILL be
+    identical to dense because flagged queries re-run dense."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    e0, ed, er = engines("flat", False, router_nprobe=1)
+    rc = np.asarray(er._sharded.slab.router_centers)
+    r = np.random.default_rng(3)
+    pairs = r.integers(0, rc.shape[0], size=(8, 2))
+    qm = ((rc[pairs[:, 0]] + rc[pairs[:, 1]]) / 2).astype(np.float32)
+    # midway queries live in TRANSFORMED space; invert the normalizers so
+    # the engine's own transform lands them back there (filter = zeros ->
+    # psi fold shifts all queries identically: still midway)
+    tfm = e0.index.transform
+    q_raw = np.asarray(tfm.vec_norm.inverse(jnp.asarray(qm)))
+    f_raw = np.asarray(
+        tfm.filt_norm.inverse(jnp.zeros((8, corpus.filters.shape[1]))))
+    check(e0.search(q_raw, f_raw), er.search(q_raw, f_raw), "midway")
+    assert er.stats.router_fallbacks > 0, "no fallback was forced"
+    print("forced fallbacks:", er.stats.router_fallbacks, "identical OK")
+    """)
+
+
+@pytest.mark.slow
+def test_router_edge_cases():
+    """Probes all on one shard (selective traffic) and filters matching no
+    psi-cluster (far out-of-distribution) stay total and exact."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    for backend in ("flat", "ivf"):
+        e0, ed, er = engines(backend, False)
+        # (a) selective: queries drawn around ONE corpus row, its own filter
+        r = np.random.default_rng(7)
+        base_q = corpus.vectors[3] + 0.05 * r.normal(
+            size=(6, spec.d)).astype(np.float32)
+        base_f = np.repeat(corpus.filters[3:4], 6, axis=0)
+        sig = er._sharded.route_signatures(base_q, base_f)
+        bits = np.unpackbits(sig, axis=1)[:, :8]
+        assert (bits.sum(axis=1) >= 1).all()
+        if backend == "ivf":
+            # nprobe=4 lists around one point: few shards, never zero
+            assert bits.sum(axis=1).max() <= 4
+        check(e0.search(base_q, base_f), er.search(base_q, base_f),
+              (backend, "one-shard"))
+        # (b) filter matching zero clusters: far out-of-support filters
+        far_f = 25.0 * np.ones((5, corpus.filters.shape[1]), np.float32)
+        sig = er._sharded.route_signatures(q, far_f)
+        assert (np.unpackbits(sig, axis=1)[:, :8].sum(axis=1) >= 1).all()
+        check(e0.search(q, far_f), er.search(q, far_f), (backend, "far"))
+    print("router edge cases OK")
+    """)
+
+
+@pytest.mark.slow
+def test_routed_ckpt_roundtrip_8_to_2():
+    """Acceptance: the routing tables round-trip through the checkpoint —
+    save a routed engine from an 8-device mesh, restore onto a 2-device
+    mesh, serve identical routed results with the SAME router centers (no
+    k-means re-run), with routing/placement restored from metadata."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    import tempfile
+    mesh2 = make_mesh((2, 1), ("data", "model"))
+    for backend in ("flat", "ivf"):
+        e0, ed, er = engines(backend, False)
+        r = np.random.default_rng(0)
+        er.insert(r.normal(size=(20, spec.d)).astype(np.float32),
+                  corpus.filters[:20].copy())
+        want = er.search(q, fq)
+        tmp = tempfile.mkdtemp()
+        er.save(tmp, step=1)
+        er2 = FCVIEngine.restore(tmp, mesh=mesh2)
+        assert er2._routing == "routed" and er2._placement == "cluster"
+        assert er2._sharded.n_shards == 2 and er2.delta_size() == 20
+        if backend == "flat":
+            assert np.array_equal(
+                np.asarray(er2._sharded.slab.router_centers),
+                np.asarray(er._sharded.slab.router_centers))
+        check(want, er2.search(q, fq), (backend, "restore-2dev-routed"))
+        er0 = FCVIEngine.restore(tmp)        # meshless: routing forced dense
+        assert er0._sharded is None
+        check(want, er0.search(q, fq), (backend, "restore-meshless"))
+    print("routed ckpt roundtrip OK")
+    """)
+
+
+@pytest.mark.slow
+def test_routed_step_does_not_retrace():
+    """Steady-state routed batches must not recompile — the routed step
+    jit-caches per (k, k', kd, delta, routed) signature like the dense one,
+    and the dispatch-layer regrouping must not perturb trace shapes."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    from repro.serve import engine as engine_mod
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0)
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                       compact_threshold=512,
+                                       escalate_margin=-1.0,  # no escalation
+                                       router_nprobe=32),     # no fallbacks
+                     mesh=mesh, placement="cluster", routing="routed")
+    qq, ff = sample_queries(corpus, 16, seed=9)
+    eng.search(qq, ff)
+    warm = engine_mod.trace_count()
+    for seed in (10, 11, 12):
+        qq, ff = sample_queries(corpus, 16, seed=seed)
+        eng._cache.clear()
+        eng.search(qq, ff)
+    assert engine_mod.trace_count() == warm, "routed step retraced"
+    assert eng.stats.router_fallbacks == 0
+    print("routed no-retrace OK")
+    """)
