@@ -10,6 +10,15 @@ step_* directory is always loadable". ``restore`` accepts ANY target mesh:
 arrays are loaded replicated and re-laid-out via device_put with the target
 sharding, which is exactly the elastic-restart path (node loss -> smaller
 mesh -> resume).
+
+Integrity: ``save`` records a crc32 per stored array in the manifest;
+``load``/``restore`` verify every array against it (and against the manifest
+key set) before handing anything back, so torn, truncated, or bit-flipped
+checkpoint files surface as ``CheckpointCorruptError`` instead of a crash
+mid-restore or silently wrong state. When no explicit ``step`` is requested,
+both fall back from a corrupt newest step to the newest INTACT one (with a
+warning) — the crash-only recovery contract extends to on-disk corruption.
+Manifests written before checksums existed load without verification.
 """
 from __future__ import annotations
 
@@ -18,6 +27,8 @@ import os
 import re
 import shutil
 import tempfile
+import warnings
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -25,6 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 
 SEP = "|"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed integrity verification (torn/truncated file,
+    checksum mismatch, unreadable manifest, or missing arrays)."""
 
 
 def _flatten(tree) -> dict:
@@ -71,17 +87,20 @@ def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
     treedef = jax.tree_util.tree_structure(tree)
+    storable = {k: np.ascontiguousarray(_to_storable(v))
+                for k, v in flat.items()}
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "keys": sorted(flat),
         "shapes": {k: list(v.shape) for k, v in flat.items()},
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "checksums": {k: zlib.crc32(v.tobytes())
+                      for k, v in storable.items()},
         "metadata": metadata or {},
     }
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
-    storable = {k: _to_storable(v) for k, v in flat.items()}
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **storable)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -118,6 +137,71 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _read_step(step_dir: str) -> tuple:
+    """Read + VERIFY one step directory; returns (manifest, {key: array}).
+
+    Everything is read eagerly so truncation/zip damage surfaces here, and
+    every array is checked against the manifest's crc32 (when present — older
+    manifests without ``checksums`` load unverified). Any failure raises
+    ``CheckpointCorruptError``; callers with ``step=None`` use that to fall
+    back to an older intact step.
+    """
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{step_dir}: unreadable manifest ({e})") from e
+    checksums = manifest.get("checksums")
+    data = {}
+    try:
+        with np.load(os.path.join(step_dir, "arrays.npz")) as npz:
+            for key in manifest["keys"]:
+                if key not in npz:
+                    raise CheckpointCorruptError(
+                        f"{step_dir}: array {key!r} missing from arrays.npz")
+                data[key] = np.ascontiguousarray(npz[key])
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:  # zipfile/pickle/OS errors on torn files
+        raise CheckpointCorruptError(
+            f"{step_dir}: unreadable arrays.npz ({e})") from e
+    if checksums is not None:
+        for key, arr in data.items():
+            want = checksums.get(key)
+            got = zlib.crc32(arr.tobytes())
+            if want != got:
+                raise CheckpointCorruptError(
+                    f"{step_dir}: checksum mismatch for {key!r} "
+                    f"(manifest {want}, file {got})")
+    return manifest, data
+
+
+def _read_verified(ckpt_dir: str, step: Optional[int]) -> tuple:
+    """Resolve ``step`` and read it verified; ``step=None`` walks newest ->
+    oldest to the first INTACT step (warning per corrupt one skipped).
+    Returns (manifest, data, step)."""
+    if step is not None:
+        manifest, data = _read_step(
+            os.path.join(ckpt_dir, f"step_{step:08d}"))
+        return manifest, data, step
+    steps = all_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    last_err = None
+    for s in reversed(steps):
+        try:
+            manifest, data = _read_step(
+                os.path.join(ckpt_dir, f"step_{s:08d}"))
+            return manifest, data, s
+        except CheckpointCorruptError as e:
+            warnings.warn(f"skipping corrupt checkpoint step {s}: {e}")
+            last_err = e
+    raise CheckpointCorruptError(
+        f"{ckpt_dir}: every checkpoint step is corrupt "
+        f"(newest error: {last_err})")
+
+
 def load(ckpt_dir: str, step: Optional[int] = None) -> tuple:
     """Template-free restore: rebuild the NESTED DICT tree from the manifest.
 
@@ -126,17 +210,12 @@ def load(ckpt_dir: str, step: Optional[int] = None) -> tuple:
     nested dicts of HOST numpy arrays — replicated, ready to be re-laid-out
     onto whatever mesh the restoring process has (``slab.shard`` /
     ``ShardedServing`` do the device_put). Dtypes are restored from the
-    manifest (bf16/f8 round-trip through the uint view). Returns
+    manifest (bf16/f8 round-trip through the uint view). Integrity is
+    verified before anything is returned; with ``step=None`` a corrupt
+    newest step falls back to the newest intact one. Returns
     (tree, step, metadata).
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+    manifest, data, step = _read_verified(ckpt_dir, step)
     tree: dict = {}
     for key in manifest["keys"]:
         arr = _from_storable(data[key], manifest["dtypes"][key])
@@ -154,17 +233,11 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
 
     ``shardings``: optional matching tree of NamedShardings for the TARGET
     mesh — this is the elastic-reshard path; None keeps arrays on the default
-    device.
+    device. Integrity-verified like ``load`` (corrupt newest step falls back
+    when ``step=None``).
     Returns (tree, step, metadata).
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+    manifest, data, step = _read_verified(ckpt_dir, step)
 
     flat_template = _flatten(template)
     if sorted(flat_template) != manifest["keys"]:

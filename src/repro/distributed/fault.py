@@ -78,12 +78,26 @@ class HeartbeatTracker:
         return out
 
     def failures(self, current_step: int) -> list:
+        """Hosts silent for more than ``timeout_steps`` steps.
+
+        A host that has NEVER recorded counts its silence from step 0 (not
+        from the ``last_step = -1`` sentinel), so a fresh tracker at step 0
+        reports no failures — nobody has had a chance to heartbeat yet.
+        """
         return [h for h, st in self.hosts.items()
-                if st.alive and current_step - st.last_step > self.timeout_steps]
+                if st.alive
+                and current_step - max(st.last_step, 0) > self.timeout_steps]
 
     def mark_dead(self, host_ids: Sequence[int]):
         for h in host_ids:
             self.hosts[h].alive = False
+
+    def mark_alive(self, host_ids: Sequence[int]):
+        """Resurrect hosts (the self-healing cutover path): alive again with
+        a clean straggler record, EWMA history retained."""
+        for h in host_ids:
+            self.hosts[h].alive = True
+            self._strag_count[h] = 0
 
     def alive_hosts(self) -> list:
         return [h for h, st in self.hosts.items() if st.alive]

@@ -226,7 +226,8 @@ def cluster_sharded_layout(vectors: Array, centroids: Array, n_shards: int):
     return jnp.asarray(perm), jnp.asarray(shard_of_cluster)
 
 
-def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
+def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
+                     degraded: bool = False):
     """Like sharded_search_fn but each shard is given a per-query probe mask.
 
     Per-query routed semantics: a query's candidates come ONLY from shards
@@ -238,15 +239,26 @@ def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
     counterpart — router computed in-trace from the slab's placement tables,
     with an exactness bound + dense fallback — is the routed batch step in
     ``repro.serve.sharded``.
+
+    ``degraded=True`` adds one replicated input: an ``alive`` (n_shards,)
+    bool mask, ANDed into the cond predicate so a dead shard takes the
+    zero-work branch for EVERY query (dead == never-routed) and contributes
+    only ``-inf`` rows — shard-loss-tolerant search over the survivors. The
+    mask is a traced argument: marking more shards dead never recompiles.
     """
     axes = tuple(shard_axes)
     sizes = tuple(mesh.shape[a] for a in axes)
 
-    def local_fn(vectors, sq_norms, queries, probe_mask):
+    def local_fn(vectors, sq_norms, queries, probe_mask, *rest):
         n_local = vectors.shape[0]
         lin = linear_shard_index(axes, sizes)
         offset = lin * n_local
         mine = probe_mask[:, lin]  # (q,)
+        pred = jnp.any(mine)
+        if degraded:
+            alive = rest[0]
+            mine = mine & alive[lin]
+            pred = pred & alive[lin]
         kl = min(k, n_local)
 
         def scan(_):
@@ -257,7 +269,7 @@ def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
             return (jnp.full((queries.shape[0], kl), -jnp.inf, queries.dtype),
                     jnp.zeros((queries.shape[0], kl), jnp.int32) + offset)
 
-        vals, idx = jax.lax.cond(jnp.any(mine), scan, skip, None)
+        vals, idx = jax.lax.cond(pred, scan, skip, None)
         if vals.shape[-1] < k:
             pad = k - vals.shape[-1]
             vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
@@ -266,11 +278,13 @@ def routed_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int):
             vals, idx = _merge_over_axis(vals, idx, ax, k)
         return vals, idx
 
-    row_spec = P(axes)
+    in_specs = (P(axes), P(axes), P(), P())
+    if degraded:
+        in_specs = in_specs + (P(),)
     return shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(row_spec, row_spec, P(), P()),
+        in_specs=in_specs,
         out_specs=(P(), P()),
         check_vma=False,
     )

@@ -48,11 +48,27 @@ rows) through ``repro.checkpoint.ckpt``; ``FCVIEngine.restore(ckpt_dir,
 mesh=...)`` rebuilds an engine on ANY target mesh — arrays are loaded
 replicated on host and re-laid-out by the sharding step, which is the
 elastic-restart path (build on 8 devices, restore and serve on 2).
+
+Degraded serving: a mesh-backed engine carries a ``ShardHealth`` layer
+(``repro.serve.health``) — shards marked dead (operator action, heartbeat
+timeout, or straggler eviction) are masked out of the sharded step via its
+zero-work ``lax.cond`` branch, results stay bit-identical to a search over
+the surviving shards' rows, and queries the dead shards could have answered
+carry a coverage flag (``stats.last_coverage`` / ``stats.uncovered_queries``)
+instead of silently wrong results. Around the jitted step sits an off-trace
+resilience envelope: input hardening at the ``search`` boundary (NaN/Inf,
+shape, ``k`` vs corpus), bounded retry with exponential backoff on
+``TransientShardError``, a per-batch deadline counter, and queue
+backpressure (``BackpressureError`` when the cache-miss queue exceeds
+``queue_budget``). ``heal()`` turns the elastic restore into recovery:
+checkpoint -> re-place the corpus onto the surviving mesh (placement
+preserved) -> bit-identity-validated cutover.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from functools import partial
 from typing import List, Optional
@@ -66,6 +82,12 @@ from repro.core import fcvi, theory
 from repro.core.baselines import BoxPredicate
 from repro.core.fcvi import FCVIConfig, FCVIIndex
 from repro.index import flat as flat_mod
+from repro.serve.health import (BackpressureError, ShardHealth,
+                                TransientShardError)
+
+# magnitudes beyond this overflow fp32 when squared in the scoring path —
+# the input-hardening boundary rejects them as out of support
+_SUPPORT_LIMIT = 1e18
 
 # incremented at TRACE time inside _batch_step: stable across steady-state
 # batches of the same padded shape, so tests can assert "no silent retracing"
@@ -133,6 +155,16 @@ class EngineConfig:
     compact_threshold: int = 2048  # delta rows triggering compaction
     multi_probe_r: int = 4
     router_nprobe: int = 0         # routed flat serving: probed psi-clusters
+    # -- resilience envelope (off-trace; defaults keep behavior unchanged) --
+    deadline_s: float = 0.0        # per-batch deadline; 0 disables the check
+    max_retries: int = 2           # bounded retry on TransientShardError
+    retry_backoff_s: float = 0.05  # base backoff, doubled per retry
+    queue_budget: int = 0          # max cache-miss queue; 0 = unlimited
+    # straggler-eviction z-threshold for the shard health layer. NOTE the
+    # sample-sd z of ONE outlier in a fleet of n is bounded by (n-1)/sqrt(n)
+    # (~2.47 for n=8), so small fleets need a threshold below that bound for
+    # single-shard stragglers to ever be evictable
+    straggler_z: float = 3.0
 
 
 @dataclasses.dataclass
@@ -154,6 +186,17 @@ class EngineStats:
     router_fallbacks: int = 0
     shards_active: int = 0
     shard_steps: int = 0
+    # -- degraded serving / resilience envelope ---------------------------
+    degraded_batches: int = 0      # batches served with >= 1 dead shard
+    uncovered_queries: int = 0     # queries whose coverage flag was raised
+    retries: int = 0               # TransientShardError retries
+    deadline_misses: int = 0       # batches exceeding cfg.deadline_s
+    backpressure_drops: int = 0    # queries shed by BackpressureError
+    straggler_evictions: int = 0   # shards evicted by the health layer
+    heals: int = 0                 # validated heal() cutovers
+    # per-query coverage flags of the LAST search call (True = certified
+    # unaffected by dead shards; all-True while healthy)
+    last_coverage: Optional[np.ndarray] = None
 
     @property
     def qps(self) -> float:
@@ -165,6 +208,13 @@ class EngineStats:
         if not self.shard_steps:
             return 0.0
         return 1.0 - self.shards_active / self.shard_steps
+
+    @property
+    def coverage_rate(self) -> float:
+        """Fraction of served queries certified unaffected by dead shards."""
+        if not self.queries:
+            return 1.0
+        return 1.0 - self.uncovered_queries / self.queries
 
 
 @dataclasses.dataclass
@@ -224,8 +274,17 @@ class FCVIEngine:
         self._router_centers = router_centers
         self._sharded = None
         self._sharded_delta = None
+        # degraded-serving state: health layer (mesh engines only), the
+        # alive-mask signature the cache was filled under, the optional
+        # fault injector hook, and the heal cutover lock
+        self.health: Optional[ShardHealth] = None
+        self.fault_injector = None
+        self._alive_sig: Optional[bytes] = None
+        self._heal_lock = threading.Lock()
         if mesh is not None:
             self._build_sharded()
+            self.health = ShardHealth(self._sharded.n_shards,
+                                      straggler_z=self.cfg.straggler_z)
 
     def _build_sharded(self):
         """(Re)shard the serving state onto the configured mesh."""
@@ -264,28 +323,112 @@ class FCVIEngine:
         while len(self._cache) > self.cfg.cache_entries:
             self._cache.popitem(last=False)
 
+    # -- input hardening ---------------------------------------------------
+    def _validate_inputs(self, queries, filters):
+        """Reject malformed/poisoned inputs at the serving boundary with
+        clear ``ValueError``s instead of producing garbage top-k: NaN/Inf
+        values, dimension mismatches, empty batches, out-of-support filter
+        magnitudes (they overflow fp32 when squared), and ``k`` exceeding
+        the corpus. Returns the inputs as fp32 numpy arrays."""
+        q = np.asarray(queries, np.float32)
+        f = np.asarray(filters, np.float32)
+        if q.ndim != 2 or f.ndim != 2:
+            raise ValueError(
+                f"queries/filters must be 2-D (n, dim); got shapes "
+                f"{np.shape(queries)} / {np.shape(filters)}")
+        if q.shape[0] == 0:
+            raise ValueError("empty query batch: queries.shape[0] == 0")
+        if q.shape[0] != f.shape[0]:
+            raise ValueError(
+                f"queries and filters disagree on batch size: "
+                f"{q.shape[0]} != {f.shape[0]}")
+        d = self.index.transform.vec_norm.mean.shape[-1]
+        m = self.index.transform.filt_norm.mean.shape[-1]
+        if q.shape[1] != d:
+            raise ValueError(
+                f"query dimension mismatch: got {q.shape[1]}, index expects "
+                f"{d}")
+        if f.shape[1] != m:
+            raise ValueError(
+                f"filter dimension mismatch: got {f.shape[1]}, index "
+                f"expects {m}")
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain NaN/Inf values")
+        if not np.isfinite(f).all():
+            raise ValueError("filters contain NaN/Inf values")
+        amax = max(float(np.abs(q).max()), float(np.abs(f).max()))
+        if amax > _SUPPORT_LIMIT:
+            raise ValueError(
+                f"input magnitude {amax:.3g} out of support (> "
+                f"{_SUPPORT_LIMIT:.0e}): values overflow fp32 when squared")
+        total = self.index.size + self.delta_size()
+        if self.cfg.k > total:
+            raise ValueError(
+                f"k={self.cfg.k} exceeds corpus size {total}")
+        return q, f
+
+    def _alive_for_search(self):
+        """Snapshot the health layer for one search call.
+
+        Returns ``None`` while every shard is healthy (the fast path — the
+        degraded step variant is never even traced), else the (n_shards,)
+        bool alive mask as a device array. The result cache is cleared
+        whenever the mask changes (cached results were computed over a
+        different surviving-row set), and cache use is suspended entirely
+        while degraded — coverage flags are per-result state a plain
+        (scores, ids) cache entry cannot carry.
+        """
+        if self.health is None:
+            return None
+        self.health.check_failures()
+        sig = (self.health.alive_mask().tobytes()
+               if self.health.any_dead() else None)
+        if sig != self._alive_sig:
+            self._cache.clear()
+            self._alive_sig = sig
+        if sig is None:
+            return None
+        return jnp.asarray(self.health.alive_mask())
+
     # -- search -----------------------------------------------------------
     def search(self, queries: np.ndarray, filters: np.ndarray):
         """queries: (n, d) fp32; filters: (n, m) fp32 (raw, un-normalized).
         Returns (scores (n, k) fp32, ids (n, k) int64); ids >= ``index.size``
         refer to un-compacted delta inserts. In routed mode the cache-miss
         queue is first sorted by router shard-group signature so co-routed
-        queries share a padded batch (and unprobed shards actually skip)."""
+        queries share a padded batch (and unprobed shards actually skip).
+
+        Inputs are validated at this boundary (see ``_validate_inputs``).
+        With dead shards the engine serves DEGRADED: results are
+        bit-identical to a search over the surviving shards' rows and
+        ``stats.last_coverage`` flags the queries the dead shards could have
+        affected. Raises ``BackpressureError`` when the cache-miss queue
+        exceeds ``cfg.queue_budget`` (> 0)."""
+        queries, filters = self._validate_inputs(queries, filters)
         t0 = time.perf_counter()
         n = queries.shape[0]
         k = self.cfg.k
         out_scores = np.zeros((n, k), np.float32)
         out_ids = np.zeros((n, k), np.int64)
+        coverage = np.ones((n,), bool)
+        alive = self._alive_for_search()
+        use_cache = alive is None
 
         keys = self._cache_keys(queries, filters)
         todo = []
         for i, key in enumerate(keys):
-            hit = self._cache_get(key)
+            hit = self._cache_get(key) if use_cache else None
             if hit is not None:
                 out_scores[i], out_ids[i] = hit
                 self.stats.cache_hits += 1
             else:
                 todo.append(i)
+
+        if self.cfg.queue_budget and len(todo) > self.cfg.queue_budget:
+            self.stats.backpressure_drops += len(todo)
+            raise BackpressureError(
+                f"dispatch queue {len(todo)} exceeds queue_budget="
+                f"{self.cfg.queue_budget}; shed load and retry")
 
         if todo and self._routed:
             # dispatch-layer regrouping: bucket the queue by shard-group
@@ -313,17 +456,59 @@ class FCVIEngine:
                     [filters[idxs],
                      np.zeros((pad, filters.shape[1]), np.float32)])
             qj, fj = jnp.asarray(q), jnp.asarray(f)
-            scores, ids = self._run_batch(qj, fj, k, n_real=len(idxs))
+            scores, ids, covered = self._dispatch_batch(
+                qj, fj, k, n_real=len(idxs), alive=alive)
             scores, ids = np.asarray(scores), np.asarray(ids)
             for j, i in enumerate(idxs):
                 out_scores[i], out_ids[i] = scores[j], ids[j]
-                self._cache_put(keys[i], (scores[j], ids[j]))
+                if covered is not None:
+                    coverage[i] = covered[j]
+                if use_cache:
+                    self._cache_put(keys[i], (scores[j], ids[j]))
 
         self.stats.queries += n
+        self.stats.uncovered_queries += int((~coverage).sum())
+        self.stats.last_coverage = coverage
         self.stats.total_time_s += time.perf_counter() - t0
         return out_scores, out_ids
 
-    def _run_batch(self, q, f, k, n_real: Optional[int] = None):
+    def _dispatch_batch(self, q, f, k, n_real: int, alive):
+        """One padded batch through the resilience envelope: bounded retry
+        with exponential backoff on ``TransientShardError`` (raised by real
+        dispatch failures or an attached fault injector), a per-batch
+        deadline counter, and the heartbeat feed to the health layer."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.before_batch()
+                out = self._run_batch(q, f, k, n_real=n_real, alive=alive)
+            except TransientShardError:
+                attempt += 1
+                self.stats.retries += 1
+                if attempt > self.cfg.max_retries:
+                    raise
+                time.sleep(self.cfg.retry_backoff_s * (2 ** (attempt - 1)))
+                continue
+            elapsed = time.perf_counter() - t0
+            if self.cfg.deadline_s and elapsed > self.cfg.deadline_s:
+                self.stats.deadline_misses += 1
+            if self.health is not None:
+                if self.fault_injector is not None:
+                    times = self.fault_injector.shard_times(
+                        self.health.n_shards, elapsed)
+                else:
+                    # one shard_map dispatch: per-shard timing is not
+                    # observable in-process, feed the batch wall time
+                    times = [elapsed] * self.health.n_shards
+                evicted = self.health.record_batch(times)
+                self.stats.straggler_evictions += len(evicted)
+            if alive is not None:
+                self.stats.degraded_batches += 1
+            return out
+
+    def _run_batch(self, q, f, k, n_real: Optional[int] = None, alive=None):
         """One padded batch through the jitted step; escalation decided here
         (host-side bookkeeping), each stage a single compiled dispatch.
 
@@ -338,8 +523,15 @@ class FCVIEngine:
         batch. ``n_real`` caps both to the real rows of a padded batch:
         filler rows have data-dependent margins/flags and must not trigger
         (or count as) re-runs.
+
+        ``alive`` (non-None = degraded mode) flows through EVERY stage —
+        the routed step, the dense fallback, and the escalation sub-batch —
+        so no stage can resurrect a dead shard's rows. Returns
+        (scores, ids, covered): ``covered`` is the per-query coverage flag
+        array capped to the real rows (None while healthy).
         """
         cfg = self.index.config
+        degraded = alive is not None
         alpha = cfg.resolved_alpha()
         kp = theory.k_prime(k, cfg.lam, alpha, self.index.size, cfg.c)
         delta = self._ensure_delta()
@@ -350,11 +542,17 @@ class FCVIEngine:
             kdp = theory.k_prime(k, cfg.lam, alpha, nd, cfg.c)
             kd = min(nd, max(kdp, 4 * k))
             dvn, dfn, dflat = delta.vn, delta.fn, delta.flat
+        nr = q.shape[0] if n_real is None else n_real
+        unc = None
         if self._routed:
-            scores, ids, margin, flag, rmask = self._sharded.step(
+            out = self._sharded.step(
                 self._sharded_delta_view(dflat), q, f,
-                k=k, kp=kp, kd=kd, routed=True)
-            nr = q.shape[0] if n_real is None else n_real
+                k=k, kp=kp, kd=kd, routed=True, alive=alive)
+            if degraded:
+                scores, ids, margin, flag, rmask, unc = out
+                unc = np.array(unc)
+            else:
+                scores, ids, margin, flag, rmask = out
             rm = np.asarray(rmask)
             self.stats.routed_batches += 1
             self.stats.shard_steps += rm.shape[1]
@@ -363,15 +561,25 @@ class FCVIEngine:
             if need.any():
                 idxs = np.nonzero(need)[0]
                 self.stats.router_fallbacks += len(idxs)
-                s2, i2, m2 = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
-                                                  k=k, kp=kp, kd=kd)
+                sub = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
+                                           k=k, kp=kp, kd=kd, alive=alive)
+                s2, i2, m2 = sub[:3]
                 take = jnp.asarray(idxs)
                 scores = scores.at[take].set(s2)
                 ids = ids.at[take].set(i2)
                 margin = margin.at[take].set(m2)
+                if degraded:
+                    # the dense re-run's certificate (vs the dense k'-th
+                    # candidate) supersedes the routed one for these rows
+                    unc[idxs] = np.asarray(sub[3])
         else:
-            scores, ids, margin = self._step(dvn, dfn, dflat, q, f,
-                                             k=k, kp=kp, kd=kd)
+            out = self._step(dvn, dfn, dflat, q, f, k=k, kp=kp, kd=kd,
+                             alive=alive)
+            if degraded:
+                scores, ids, margin, unc = out
+                unc = np.array(unc)
+            else:
+                scores, ids, margin = out
         need = np.asarray(margin < self.cfg.escalate_margin)
         if n_real is not None:
             need = need[:n_real]
@@ -380,28 +588,33 @@ class FCVIEngine:
             self.stats.escalations += len(idxs)
             kp2 = theory.k_prime(k, cfg.lam, alpha, self.index.size,
                                  cfg.c * self.cfg.kprime_escalation)
-            s2, i2, _ = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
-                                             k=k, kp=kp2, kd=kd)
+            sub = self._dense_subbatch(dvn, dfn, dflat, q, f, idxs,
+                                       k=k, kp=kp2, kd=kd, alive=alive)
+            s2, i2 = sub[:2]
             take = jnp.asarray(idxs)
             scores = scores.at[take].set(s2)
             ids = ids.at[take].set(i2)
-        return scores, ids
+            if degraded:
+                unc[idxs] = np.asarray(sub[3])
+        covered = None if unc is None else ~unc[:nr]
+        return scores, ids, covered
 
     def _dense_subbatch(self, dvn, dfn, dflat, q, f, idxs, *,
-                        k: int, kp: int, kd: int):
+                        k: int, kp: int, kd: int, alive=None):
         """Re-run ``idxs`` (row indices into the padded batch) through the
         dense step in a padded power-of-two sub-batch; pad slots recompute
-        query 0. Returns the (scores, ids, margin) rows for ``idxs``."""
+        query 0. Returns the step's output rows for ``idxs`` (3 outputs, 4
+        with a degraded ``alive`` mask)."""
         nb = q.shape[0]
         while nb // 2 >= max(len(idxs), 1):
             nb //= 2
         sel = np.zeros((nb,), np.int64)
         sel[: len(idxs)] = idxs
         sel_j = jnp.asarray(sel)
-        s2, i2, m2 = self._step(dvn, dfn, dflat, q[sel_j], f[sel_j],
-                                k=k, kp=kp, kd=kd)
+        out = self._step(dvn, dfn, dflat, q[sel_j], f[sel_j],
+                         k=k, kp=kp, kd=kd, alive=alive)
         n = len(idxs)
-        return s2[:n], i2[:n], m2[:n]
+        return tuple(o[:n] for o in out)
 
     def _sharded_delta_view(self, dflat):
         """Lazily (re)shard the delta buffer for the shard_map steps."""
@@ -411,7 +624,8 @@ class FCVIEngine:
             self._sharded_delta = self._sharded.shard_delta(self._delta)
         return self._sharded_delta
 
-    def _step(self, dvn, dfn, dflat, q, f, *, k: int, kp: int, kd: int):
+    def _step(self, dvn, dfn, dflat, q, f, *, k: int, kp: int, kd: int,
+              alive=None):
         """Dispatch one padded batch to the single-device jitted step or the
         mesh-sharded DENSE shard_map step (identical results by
         construction; the routed step is dispatched by ``_run_batch``)."""
@@ -419,7 +633,7 @@ class FCVIEngine:
             return _batch_step(self.index, dvn, dfn, dflat, q, f,
                                k=k, kp=kp, kd=kd)
         return self._sharded.step(self._sharded_delta_view(dflat), q, f,
-                                  k=k, kp=kp, kd=kd)
+                                  k=k, kp=kp, kd=kd, alive=alive)
 
     def _staged_query(self, q, f, k):
         """Pre-jit two-stage query WITHOUT the delta merge — kept as the
@@ -489,6 +703,75 @@ class FCVIEngine:
         if self._sharded is not None:
             self._build_sharded()   # re-shard the grown slabs onto the mesh
         self.stats.compactions += 1
+
+    # -- self-healing ------------------------------------------------------
+    def heal(self, ckpt_dir: str, probe_queries=None, probe_filters=None,
+             *, step: int = 0, background: bool = False):
+        """Recover full coverage after shard loss via elastic re-place.
+
+        checkpoint -> restore the FULL corpus onto a mesh of only the
+        surviving devices (placement/routing preserved, so affinity packing
+        is re-derived from the same router geometry) -> validate the
+        candidate engine bit-identically against a meshless restore of the
+        same checkpoint on ``probe_queries``/``probe_filters`` -> cut over
+        under the heal lock (swap index/mesh/sharded state, fresh health
+        layer, cache cleared). After a successful heal every row is served
+        again and coverage returns to 100%.
+
+        Returns True on a validated cutover, False when validation failed
+        (the degraded engine keeps serving untouched). ``background=True``
+        runs the same flow on a daemon thread and returns it (join it, then
+        check ``stats.heals``). Requires a mesh-backed engine with one
+        device per shard and at least one surviving device.
+        """
+        if background:
+            t = threading.Thread(
+                target=self.heal, args=(ckpt_dir, probe_queries,
+                                        probe_filters),
+                kwargs={"step": step}, daemon=True)
+            t.start()
+            return t
+        if self._sharded is None or self.health is None:
+            raise RuntimeError("heal() requires a mesh-backed engine")
+        devices = np.asarray(self._mesh.devices).reshape(-1)
+        if self._sharded.n_shards != devices.size:
+            raise NotImplementedError(
+                "heal() assumes one shard per mesh device")
+        alive_idx = np.nonzero(self.health.alive_mask())[0]
+        if alive_idx.size == 0:
+            raise RuntimeError("heal() needs at least one surviving shard")
+        self.save(ckpt_dir, step=step)
+        from jax.sharding import Mesh
+
+        shape = (alive_idx.size,) + (1,) * (len(self._mesh.axis_names) - 1)
+        new_mesh = Mesh(devices[alive_idx].reshape(shape),
+                        self._mesh.axis_names)
+        cand = FCVIEngine.restore(ckpt_dir, step=step, config=self.cfg,
+                                  mesh=new_mesh, rules=self._rules,
+                                  placement=self._placement,
+                                  routing=self._routing)
+        if probe_queries is not None:
+            ref = FCVIEngine.restore(ckpt_dir, step=step, config=self.cfg)
+            s_new, i_new = cand.search(probe_queries, probe_filters)
+            s_ref, i_ref = ref.search(probe_queries, probe_filters)
+            if not (np.array_equal(s_new, s_ref)
+                    and np.array_equal(i_new, i_ref)):
+                return False
+        with self._heal_lock:
+            self.index = cand.index
+            self._mesh = new_mesh
+            self._router_centers = cand._router_centers
+            self._sharded = cand._sharded
+            self._sharded_delta = cand._sharded_delta
+            self._delta_v = cand._delta_v
+            self._delta_f = cand._delta_f
+            self._delta = cand._delta
+            self.health = ShardHealth(self._sharded.n_shards,
+                                      straggler_z=self.cfg.straggler_z)
+            self._alive_sig = None
+            self._cache.clear()
+            self.stats.heals += 1
+        return True
 
     # -- checkpoint lifecycle ---------------------------------------------
     def save(self, ckpt_dir: str, step: int = 0, keep: int = 3) -> str:

@@ -1,0 +1,117 @@
+"""Shard-health layer: ``distributed.fault`` policies wired to serving.
+
+``ShardHealth`` tracks the liveness of the serving shards of ONE
+``ShardedServing`` mesh by reusing the training-side ``HeartbeatTracker``
+(EWMA z-score straggler detection with patience, step-timeout failure
+detection) at shard granularity: one "host" per shard, one "step" per
+dispatched engine batch. The engine feeds it per-batch per-shard step times
+(real, or synthetic from the fault-injection harness — on a forced host mesh
+all shards share cores, so per-shard timing is only observable via
+injection) and consults ``alive_mask()`` before every search:
+
+  * a shard marked dead (operator ``mark_dead``, heartbeat timeout via
+    ``check_failures``, or straggler eviction inside ``record_batch``) is
+    masked out of the sharded batch step — it takes the existing
+    ``lax.cond`` zero-work branch, exactly as if no query ever routed to it
+    (dead == never-routed);
+  * the engine then serves DEGRADED: results are bit-identical to a search
+    restricted to the surviving shards' rows, and queries whose certificate
+    shows the dead shards could have held a top-k hit carry a per-query
+    coverage flag (``EngineStats.last_coverage``) instead of silently wrong
+    results;
+  * ``FCVIEngine.heal`` turns the elastic checkpoint/restore path into
+    recovery: checkpoint, re-place the full corpus onto the surviving mesh
+    (placement preserved), validate the new engine with the bit-identity
+    harness, cut over, and reset health.
+
+The exception types of the off-trace resilience envelope live here too:
+``TransientShardError`` is what the engine's bounded-retry loop catches
+(raised by real dispatch failures or the fault injector), and
+``BackpressureError`` is raised when the cache-miss dispatch queue exceeds
+``EngineConfig.queue_budget`` — the caller sheds load instead of queueing
+unboundedly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.distributed import fault
+
+
+class TransientShardError(RuntimeError):
+    """A per-batch shard dispatch failure worth retrying (with backoff)."""
+
+
+class BackpressureError(RuntimeError):
+    """The dispatch queue exceeded the engine's queue budget; shed load."""
+
+
+class ShardHealth:
+    """Liveness + straggler tracking for the shards of one serving mesh."""
+
+    def __init__(self, n_shards: int, *, alpha: float = 0.2,
+                 straggler_z: float = 3.0, straggler_patience: int = 3,
+                 timeout_steps: int = 2, evict_stragglers: bool = True):
+        self.n_shards = n_shards
+        self.tracker = fault.HeartbeatTracker(
+            n_hosts=n_shards, alpha=alpha, straggler_z=straggler_z,
+            straggler_patience=straggler_patience,
+            timeout_steps=timeout_steps)
+        self.evict_stragglers = evict_stragglers
+        self._batch = 0          # monotone batch counter == heartbeat step
+
+    # -- heartbeat feed ----------------------------------------------------
+    def record_batch(self, shard_times: Sequence[float]) -> list:
+        """Record one dispatched batch's per-shard step times.
+
+        Dead shards are skipped (they produced no heartbeat). Persistent
+        stragglers — shards z-sigma slower than the fleet for
+        ``straggler_patience`` consecutive batches — are evicted like
+        failures (marked dead, masked from the next batch on) when
+        ``evict_stragglers`` is set; the evicted shard ids are returned so
+        the engine can count them.
+        """
+        step = self._batch
+        self._batch += 1
+        for s, t in enumerate(shard_times):
+            if s < self.n_shards and self.tracker.hosts[s].alive:
+                self.tracker.record(s, step, float(t))
+        if not self.evict_stragglers:
+            return []
+        evicted = [s for s in self.tracker.stragglers()
+                   if self.tracker.hosts[s].alive]
+        if evicted:
+            self.tracker.mark_dead(evicted)
+        return evicted
+
+    def check_failures(self) -> list:
+        """Mark (and return) shards silent past the heartbeat timeout."""
+        dead = self.tracker.failures(self._batch)
+        if dead:
+            self.tracker.mark_dead(dead)
+        return dead
+
+    # -- liveness ----------------------------------------------------------
+    def mark_dead(self, shards: Sequence[int]):
+        self.tracker.mark_dead(list(shards))
+
+    def mark_alive(self, shards: Sequence[int]):
+        self.tracker.mark_alive(list(shards))
+
+    def alive_mask(self) -> np.ndarray:
+        """(n_shards,) bool — True for shards still serving."""
+        mask = np.zeros((self.n_shards,), bool)
+        mask[self.tracker.alive_hosts()] = True
+        return mask
+
+    def dead_shards(self) -> list:
+        return [s for s in range(self.n_shards)
+                if not self.tracker.hosts[s].alive]
+
+    def any_dead(self) -> bool:
+        return len(self.tracker.alive_hosts()) < self.n_shards
+
+    def n_alive(self) -> int:
+        return len(self.tracker.alive_hosts())

@@ -131,24 +131,41 @@ def _local_flat_topk(vectors: Array, sq_norms: Array, row_ids: Array,
     return vals, row_ids[idx]
 
 
+def _cluster_bounds(q_t: Array, centers: Array, radii: Array):
+    """Exact per-(query, cluster) center distances + ball-bound scores.
+
+    Returns (d2 (b, ncl), ub (b, ncl)): ``ub`` is the best score (negative
+    squared L2) any row of cluster c could reach for each query, from the
+    triangle-inequality ball bound ||q - x|| >= ||q - mu_c|| - r_c. The
+    distances are computed with the exact (non-expanded) formula — the bound
+    must never be underestimated, so the matmul expansion's cancellation
+    error is avoided. Shared by the shard router's clipping check and the
+    degraded-mode coverage certificate.
+    """
+    d2 = jnp.sum(jnp.square(q_t[:, None, :] - centers[None]), axis=-1)
+    ub = -jnp.square(jnp.maximum(jnp.sqrt(d2) - radii[None, :], 0.0))
+    return d2, ub
+
+
 def _flat_router(q_t: Array, centers: Array, radii: Array, incidence: Array,
-                 router_nprobe: int):
+                 router_nprobe: int, d2: Optional[Array] = None,
+                 ub: Optional[Array] = None):
     """Per-query shard mask + clipping bound for cluster-placed flat slabs.
 
     q_t: (b, d) transformed queries; centers (ncl, d), radii (ncl,),
     incidence (ncl, ns) — the slab's routing tables. Probes the
     ``router_nprobe`` nearest psi-clusters per query and activates every
     shard holding rows of a probed cluster. Returns (route_mask (b, ns) bool,
-    bound (b,)): ``bound`` is the best score (negative squared L2) any row on
-    a NON-activated shard could reach, from the triangle-inequality ball
-    bound ||q - x|| >= ||q - mu_c|| - r_c; the step compares it against the
+    bound (b,)): ``bound`` is the best ball-bound score any row on a
+    NON-activated shard could reach; the step compares it against the
     k'-th routed candidate to decide whether routing may have clipped.
+    ``d2``/``ub`` accept precomputed ``_cluster_bounds`` output (the degraded
+    step shares them with the coverage certificate).
     """
     ncl = centers.shape[0]
     r = min(router_nprobe, ncl)
-    # exact (non-expanded) center distances: the bound must never be
-    # underestimated, so avoid the matmul expansion's cancellation error
-    d2 = jnp.sum(jnp.square(q_t[:, None, :] - centers[None]), axis=-1)
+    if d2 is None:
+        d2, ub = _cluster_bounds(q_t, centers, radii)
     _, probe = jax.lax.top_k(-d2, r)
     probed = jnp.clip(
         jnp.sum(jax.nn.one_hot(probe, ncl, dtype=jnp.float32), axis=1),
@@ -159,7 +176,6 @@ def _flat_router(q_t: Array, centers: Array, radii: Array, incidence: Array,
     inactive = 1.0 - route_mask.astype(jnp.float32)
     clipped = (inactive @ incidence.T) > 0.0                 # (b, ncl)
     has_rows = jnp.sum(incidence, axis=-1) > 0.0             # (ncl,)
-    ub = -jnp.square(jnp.maximum(jnp.sqrt(d2) - radii[None, :], 0.0))
     bound = jnp.max(
         jnp.where(clipped & has_rows[None, :], ub, -jnp.inf), axis=-1)
     return route_mask, bound
@@ -327,51 +343,91 @@ class ShardedServing:
 
     # -- the sharded batch step -------------------------------------------
     def step(self, delta: Optional[ShardedDelta], q: Array, f: Array, *,
-             k: int, kp: int, kd: int, routed: bool = False):
+             k: int, kp: int, kd: int, routed: bool = False,
+             alive: Optional[Array] = None):
         """One padded batch through the sharded hot path; same contract as
         ``engine._batch_step``: (scores (b, k), ids (b, k), margin (b,)).
         With ``routed=True`` two extra outputs follow: the per-query clipping
         flag (b,) bool (True = routing may have clipped the dense top-k';
-        re-run dense) and the route mask (b, n_shards) bool."""
+        re-run dense) and the route mask (b, n_shards) bool.
+
+        ``alive`` ((n_shards,) bool, or None = all healthy) switches to the
+        DEGRADED step variant: shards marked dead take the zero-work
+        ``lax.cond`` skip branch (dead == never-routed) and contribute no
+        candidates, so results are exactly a search restricted to the
+        surviving shards' slab rows; one more output ``uncovered`` (b,) bool
+        follows (True = the dead shards could have held a top-k' candidate
+        for this query — flat: psi-cluster ball-bound certificate; IVF:
+        a probed list is owned by a dead shard; flat without routing tables:
+        conservatively every query). The mask is a TRACED argument, so
+        marking further shards dead never retraces, and the healthy path's
+        traces are untouched (separate jit-cache key).
+        """
+        degraded = alive is not None
         nld = None if delta is None else delta.n_local
-        key = (k, kp, kd, nld, routed)
+        key = (k, kp, kd, nld, routed, degraded)
         fn = self._steps.get(key)
         if fn is None:
-            fn = self._steps[key] = self._build_step(k, kp, kd, nld, routed)
-        slab_args = self._slab_args(routed)
-        if delta is None:
-            return fn(self.index.transform, *slab_args, self.vectors_n,
-                      self.filters_n, q, f)
-        return fn(self.index.transform, *slab_args, self.vectors_n,
-                  self.filters_n, delta.vt, delta.sq, delta.row_ids,
-                  delta.vn, delta.fn, q, f)
+            fn = self._steps[key] = self._build_step(k, kp, kd, nld, routed,
+                                                     degraded)
+        args = ((self.index.transform,) + self._slab_args(routed, degraded)
+                + (self.vectors_n, self.filters_n))
+        if delta is not None:
+            args = args + (delta.vt, delta.sq, delta.row_ids,
+                           delta.vn, delta.fn)
+        args = args + (q, f)
+        if degraded:
+            args = args + (jnp.asarray(alive, bool),)
+        return fn(*args)
 
     def _has_flat_router(self) -> bool:
         return (self.index.config.backend == "flat"
                 and self.slab.router_centers is not None)
 
-    def _slab_args(self, routed: bool = False):
+    def slab_row_owner(self) -> np.ndarray:
+        """(index.size,) int32 — shard owning each corpus row under the SLAB
+        placement (flat: the row's slab block; IVF: its list's shard). This
+        is the failure-domain map of degraded serving: a shard's death
+        removes exactly the rows it owns here from the candidate space."""
+        n = self.index.size
+        owner = np.zeros((n,), np.int32)
+        if self.index.config.backend == "flat":
+            ids = np.asarray(self.slab.row_ids).reshape(self.n_shards, -1)
+            for s in range(self.n_shards):
+                block = ids[s]
+                owner[block[block >= 0]] = s
+        else:
+            l2s = np.asarray(self.slab.list_to_shard)
+            lists = np.asarray(self.index.backend.lists)
+            for g in range(lists.shape[0]):
+                rows = lists[g]
+                owner[rows[rows >= 0]] = l2s[g]
+        return owner
+
+    def _slab_args(self, routed: bool = False, degraded: bool = False):
         s = self.slab
         if self.index.config.backend == "flat":
             base = (s.vectors, s.sq_norms, s.row_ids)
-            if routed and self._has_flat_router():
+            # the degraded step needs the routing tables too (coverage
+            # certificate), even when serving dense
+            if (routed or degraded) and self._has_flat_router():
                 base = base + (s.router_centers, s.router_radii,
                                s.cluster_to_shard)
             return base
         return (s.grouped, s.grouped_sq, s.valid, s.lists, s.centroids,
                 s.c_sq, s.slot_of_list)
 
-    def _slab_specs(self, row, routed: bool = False):
+    def _slab_specs(self, row, routed: bool = False, degraded: bool = False):
         if self.index.config.backend == "flat":
             base = (row, row, row)
-            if routed and self._has_flat_router():
+            if (routed or degraded) and self._has_flat_router():
                 base = base + (P(), P(), P())   # routing tables: replicated
             return base
         # grouped layouts are list-sharded; centroid state is replicated
         return (row, row, row, row, P(), P(), P())
 
     def _build_step(self, k: int, kp: int, kd: int, nld: Optional[int],
-                    routed: bool):
+                    routed: bool, degraded: bool = False):
         from repro.serve import engine as engine_mod
 
         cfg = self.index.config
@@ -435,27 +491,36 @@ class ShardedServing:
             return jax.vmap(one_query)(q_t, q2[:, 0], local)
 
         n_slab_args = 7 if backend == "ivf" else (
-            6 if routed and has_router else 3)
+            6 if (routed or degraded) and has_router else 3)
 
         def body(tfm, *args):
             engine_mod._TRACE_COUNT[0] += 1
             slab_args = args[:n_slab_args]
             rest = args[n_slab_args:]
+            alive_v = None
+            if degraded:
+                alive_v = rest[-1]                 # (ns,) bool, replicated
+                rest = rest[:-1]
             if has_delta:
                 vn_l, fn_l, dvt, dsq, dids, dvn, dfn, q, f = rest
             else:
                 vn_l, fn_l, q, f = rest
             lin = linear_shard_index(axes, sizes)
+            ok_me = alive_v[lin] if degraded else None   # this shard alive?
             qn, fqn = tfm.normalize(q, f)
             q_t = tfm.apply_normalized(qn, fqn, use_pallas=use_pallas)
             b = q.shape[0]
 
             route_mask = bound = None
+            shard_of = cl_ub = inc = None
             if backend == "flat":
-                if routed and has_router:
+                if (routed or degraded) and has_router:
                     rc, rr, inc = slab_args[3:6]
+                    cl_d2, cl_ub = _cluster_bounds(q_t, rc, rr)
+                if routed and has_router:
                     route_mask, bound = _flat_router(q_t, rc, rr, inc,
-                                                     router_np)
+                                                     router_np, d2=cl_d2,
+                                                     ub=cl_ub)
                     mine_q = jnp.take(route_mask, lin, axis=1)   # (b,)
 
                     def scan(_):
@@ -466,8 +531,22 @@ class ShardedServing:
                         return (jnp.full((b, kl), -jnp.inf, jnp.float32),
                                 jnp.zeros((b, kl), jnp.int32))
 
-                    vals, gids = jax.lax.cond(jnp.any(mine_q), scan, skip,
-                                              None)
+                    pred = jnp.any(mine_q)
+                    if degraded:     # dead == never-routed: zero-work branch
+                        pred = jnp.logical_and(pred, ok_me)
+                    vals, gids = jax.lax.cond(pred, scan, skip, None)
+                elif degraded:
+
+                    def scan(_):
+                        return flat_scan(slab_args, q_t)
+
+                    def skip(_):
+                        return (jnp.full((b, kl), -jnp.inf, jnp.float32),
+                                jnp.zeros((b, kl), jnp.int32))
+
+                    vals, gids = jax.lax.cond(ok_me, scan, skip, None)
+                    if routed:   # 1-shard mesh: routing is a no-op
+                        route_mask = jnp.ones((b, ns), bool)
                 else:
                     vals, gids = flat_scan(slab_args, q_t)
                     if routed:   # 1-shard mesh: routing is a no-op
@@ -475,10 +554,12 @@ class ShardedServing:
             else:
                 q2 = jnp.sum(q_t * q_t, axis=-1, keepdims=True)
                 probe = ivf_probe(slab_args, q_t, q2)
-                if routed:
-                    # a probed list is wholly owned by one shard, so the mask
-                    # is exact: masked shards cannot hold any candidate
+                if routed or degraded:
+                    # a probed list is wholly owned by one shard; the routed
+                    # mask is exact, and the degraded coverage certificate
+                    # just checks probed-list ownership against the mask
                     shard_of = slab_args[6][probe] // lpp      # (b, nprobe)
+                if routed:
                     route_mask = jnp.any(
                         shard_of[:, :, None] == jnp.arange(ns)[None, None, :],
                         axis=1)                                # (b, ns)
@@ -491,8 +572,20 @@ class ShardedServing:
                         return (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
                                 jnp.full((b, kl_ivf), -1, jnp.int32))
 
-                    vals, gids = jax.lax.cond(jnp.any(mine_q), scan, skip,
-                                              None)
+                    pred = jnp.any(mine_q)
+                    if degraded:
+                        pred = jnp.logical_and(pred, ok_me)
+                    vals, gids = jax.lax.cond(pred, scan, skip, None)
+                elif degraded:
+
+                    def scan(_):
+                        return ivf_scan(slab_args, q_t, q2, probe, lin)
+
+                    def skip(_):
+                        return (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
+                                jnp.full((b, kl_ivf), -1, jnp.int32))
+
+                    vals, gids = jax.lax.cond(ok_me, scan, skip, None)
                 else:
                     vals, gids = ivf_scan(slab_args, q_t, q2, probe, lin)
 
@@ -502,7 +595,10 @@ class ShardedServing:
                     # may routing have clipped the dense top-k'? A -inf
                     # k'-th value (routed pool could not even fill k') makes
                     # the slack infinite and always flags, as it must — a
-                    # masked shard might have filled it.
+                    # masked shard might have filled it. In degraded mode the
+                    # bound still counts dead inactive shards, which only
+                    # over-flags: the dense fallback also serves without the
+                    # dead shards, so routed == dense-degraded either way.
                     kth = vals[:, -1]
                     tol = ROUTER_EPS + ROUTER_RTOL * jnp.abs(kth)
                     flag = bound >= kth - tol
@@ -511,6 +607,32 @@ class ShardedServing:
                     # construction: masked shards own none of the probed
                     # lists, so even an underfilled pool matches dense
                     flag = jnp.zeros((b,), bool)
+            if degraded:
+                # coverage certificate vs the HEALTHY corpus: could the dead
+                # shards have held a top-k' candidate for this query?
+                kth = vals[:, -1]
+                if backend == "flat" and has_router:
+                    # ball bound over psi-clusters with rows on dead shards,
+                    # same tolerance discipline as the router clipping check;
+                    # a -inf k'-th value conservatively flags
+                    dead_f = 1.0 - alive_v.astype(jnp.float32)
+                    dead_cl = (inc @ dead_f) > 0.0             # (ncl,)
+                    has_rows = jnp.sum(inc, axis=-1) > 0.0
+                    dead_bound = jnp.max(
+                        jnp.where((dead_cl & has_rows)[None, :], cl_ub,
+                                  -jnp.inf), axis=-1)
+                    tol = ROUTER_EPS + ROUTER_RTOL * jnp.abs(kth)
+                    uncovered = dead_bound >= kth - tol
+                elif backend == "ivf":
+                    # exact: the query is affected iff a probed list is
+                    # owned by a dead shard
+                    uncovered = jnp.any(
+                        jnp.logical_not(alive_v[shard_of]), axis=1)
+                else:
+                    # contiguous flat placement has no routing geometry:
+                    # conservatively flag every query while any shard is dead
+                    uncovered = jnp.broadcast_to(
+                        jnp.any(jnp.logical_not(alive_v)), (b,))
             # mirror the single-device id convention for unfillable rows
             gids = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(gids, 0))
 
@@ -537,16 +659,21 @@ class ShardedServing:
                                                   did.astype(ids.dtype), k)
 
             margin = scores[:, 0] - scores[:, -1]
+            out = (scores, ids, margin)
             if routed:
-                return scores, ids, margin, flag, route_mask
-            return scores, ids, margin
+                out = out + (flag, route_mask)
+            if degraded:
+                out = out + (uncovered,)
+            return out
 
         row = P(axes)
-        specs = (P(),) + self._slab_specs(row, routed) + (row, row)
+        specs = (P(),) + self._slab_specs(row, routed, degraded) + (row, row)
         if has_delta:
             specs = specs + (row, row, row, row, row)
         specs = specs + (P(), P())
-        n_out = 5 if routed else 3
+        if degraded:
+            specs = specs + (P(),)     # alive mask: replicated, traced
+        n_out = (5 if routed else 3) + (1 if degraded else 0)
         mapped = shard_map(body, mesh=self.mesh, in_specs=specs,
                            out_specs=(P(),) * n_out, check_vma=False)
         return jax.jit(mapped)

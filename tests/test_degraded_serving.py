@@ -1,0 +1,415 @@
+"""Degraded-mode serving: shard loss, stragglers, corrupt state, poison.
+
+The contract under test (the tentpole acceptance criterion): with shards
+marked dead on a forced 8-device host mesh the engine serves EVERY query
+without crashing, results are bit-identical to a ground-truth search over
+the surviving rows (``faultinject.surviving_reference``), queries the dead
+shards could have affected carry a coverage flag, and ``heal()`` restores
+full coverage through a bit-identity-validated elastic re-place.
+
+Fast cases (input hardening, the resilience envelope, checkpoint
+corruption, health-layer policy) run in-process on a 1-device mesh or no
+mesh at all; the multi-shard fault-injection matrix runs in subprocesses
+with 8 forced host devices, exactly like tests/test_sharded_engine.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.launch.mesh import make_mesh
+from repro.serve import faultinject as fi
+from repro.serve.engine import EngineConfig, FCVIEngine
+from repro.serve.health import (BackpressureError, ShardHealth,
+                                TransientShardError)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n=800, d=64, n_categories=5, n_numeric=3, seed=5)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 8, seed=6)
+    return corpus, np.asarray(q), np.asarray(fq)
+
+
+@pytest.fixture(scope="module")
+def engine(data):
+    corpus, _, _ = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat")
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    return FCVIEngine(idx, EngineConfig(k=5, batch_size=8))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: input hardening at the search boundary
+# ---------------------------------------------------------------------------
+
+def test_poisoned_inputs_rejected(data, engine):
+    corpus, q, fq = data
+    d, m = q.shape[1], fq.shape[1]
+    for name, bad_q, bad_f in fi.poisoned_inputs(d, m):
+        with pytest.raises(ValueError):
+            engine.search(bad_q, bad_f)
+    # sanity: clean inputs still served
+    s, i = engine.search(q, fq)
+    assert s.shape == (len(q), 5) and np.isfinite(s).all()
+
+
+def test_k_exceeding_corpus_rejected(data):
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, backend="flat")
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=corpus.vectors.shape[0] + 1))
+    with pytest.raises(ValueError, match="exceeds corpus"):
+        eng.search(q, fq)
+
+
+# ---------------------------------------------------------------------------
+# ShardHealth policy (pure host-side logic — no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_shard_health_straggler_eviction():
+    h = ShardHealth(4, straggler_z=1.4, straggler_patience=3)
+    evicted = []
+    for _ in range(6):
+        evicted += h.record_batch([0.01, 0.01, 0.01, 0.2])
+    assert evicted == [3]
+    assert h.dead_shards() == [3]
+    assert h.alive_mask().tolist() == [True, True, True, False]
+    assert h.n_alive() == 3 and h.any_dead()
+
+
+def test_shard_health_recovered_straggler_not_evicted():
+    """Recovery before ``straggler_patience`` expires resets the persistence
+    count: intermittent slowness never evicts (alpha=1 -> EWMA = latest)."""
+    h = ShardHealth(4, alpha=1.0, straggler_z=1.4, straggler_patience=3)
+    slow = [0.01, 0.01, 0.01, 0.2]
+    fast = [0.01, 0.01, 0.01, 0.01]
+    evicted = []
+    for times in [slow, slow, slow, fast, slow, slow, fast]:
+        evicted += h.record_batch(times)     # never 3 slow checks in a row
+    assert evicted == []
+    assert h.dead_shards() == []
+
+
+def test_shard_health_heartbeat_timeout():
+    h = ShardHealth(3, timeout_steps=2)
+    assert h.check_failures() == []          # fresh layer: nothing silent yet
+    for _ in range(4):
+        h.record_batch([0.01, 0.01])         # shard 2 never heartbeats
+    assert h.check_failures() == [2]
+    assert h.dead_shards() == [2]
+    h.mark_alive([2])
+    assert h.dead_shards() == []
+
+
+def test_dead_shard_skipped_by_heartbeat_feed():
+    h = ShardHealth(2)
+    h.mark_dead([1])
+    h.record_batch([0.01, 0.01])             # must not resurrect shard 1
+    assert h.dead_shards() == [1]
+
+
+# ---------------------------------------------------------------------------
+# Resilience envelope (1-device mesh: the envelope is mesh-size agnostic)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def mesh_engine(data):
+    corpus, _, _ = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat")
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return FCVIEngine(idx, EngineConfig(k=5, batch_size=8,
+                                        retry_backoff_s=0.001),
+                      mesh=mesh)
+
+
+def test_transient_errors_retried_within_budget(data, mesh_engine):
+    _, q, fq = data
+    mesh_engine.fault_injector = fi.FaultInjector(transient_failures=2)
+    s, i = mesh_engine.search(q, fq)
+    assert mesh_engine.stats.retries == 2
+    assert np.isfinite(s).all()
+
+
+def test_transient_errors_beyond_budget_propagate(data, mesh_engine):
+    _, q, fq = data
+    mesh_engine.fault_injector = fi.FaultInjector(transient_failures=10)
+    with pytest.raises(TransientShardError):
+        mesh_engine.search(q, fq)
+    assert mesh_engine.stats.retries == mesh_engine.cfg.max_retries + 1
+
+
+def test_backpressure_sheds_load(data, mesh_engine):
+    _, q, fq = data
+    mesh_engine.cfg.queue_budget = 2
+    with pytest.raises(BackpressureError):
+        mesh_engine.search(q, fq)
+    assert mesh_engine.stats.backpressure_drops == len(q)
+    mesh_engine.cfg.queue_budget = 0
+    mesh_engine.search(q, fq)                # recovers once budget lifted
+
+
+def test_deadline_misses_counted(data, mesh_engine):
+    _, q, fq = data
+    mesh_engine.cfg.deadline_s = 1e-9        # nothing beats a nanosecond
+    mesh_engine.search(q, fq)
+    assert mesh_engine.stats.deadline_misses >= 1
+
+
+def test_coverage_all_true_while_healthy(data, mesh_engine):
+    _, q, fq = data
+    mesh_engine.search(q, fq)
+    assert mesh_engine.stats.last_coverage.all()
+    assert mesh_engine.stats.coverage_rate == 1.0
+    assert mesh_engine.stats.degraded_batches == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: checkpoint integrity (torn/corrupt state)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_newest_step_falls_back(data, engine, tmp_path):
+    corpus, q, fq = data
+    want = engine.search(q, fq)
+    engine.save(str(tmp_path), step=1)
+    engine.save(str(tmp_path), step=2)
+    fi.corrupt_checkpoint(str(tmp_path), 2, "truncate")
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        restored = FCVIEngine.restore(str(tmp_path))
+    got = restored.search(q, fq)
+    np.testing.assert_array_equal(want[1], got[1])
+    np.testing.assert_array_equal(want[0], got[0])
+
+
+@pytest.mark.parametrize("mode", ["truncate", "flip", "erase_manifest"])
+def test_explicit_corrupt_step_raises(data, engine, tmp_path, mode):
+    from repro.checkpoint.ckpt import CheckpointCorruptError, load
+
+    engine.save(str(tmp_path), step=1)
+    fi.corrupt_checkpoint(str(tmp_path), 1, mode)
+    with pytest.raises(CheckpointCorruptError):
+        load(str(tmp_path), step=1)
+
+
+def test_manifest_checksum_mismatch_detected(data, engine, tmp_path):
+    """Bit rot that leaves the zip container intact is still caught by the
+    manifest crc32s (simulated by tampering with the recorded checksum)."""
+    import json
+
+    from repro.checkpoint.ckpt import CheckpointCorruptError, load
+
+    engine.save(str(tmp_path), step=1)
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    key = next(iter(manifest["checksums"]))
+    manifest["checksums"][key] ^= 0xFFFF
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        load(str(tmp_path), step=1)
+
+
+def test_all_steps_corrupt_raises(data, engine, tmp_path):
+    from repro.checkpoint.ckpt import CheckpointCorruptError, load
+
+    engine.save(str(tmp_path), step=1)
+    fi.corrupt_checkpoint(str(tmp_path), 1, "truncate")
+    with pytest.raises(CheckpointCorruptError), pytest.warns(UserWarning):
+        load(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# The multi-shard fault-injection matrix (8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_PRELUDE = """
+    import numpy as np, jax.numpy as jnp, tempfile
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import EngineConfig, FCVIEngine
+    from repro.serve import faultinject as fi
+
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 16, seed=3)
+    q, fq = np.asarray(q), np.asarray(fq)
+
+    def make_engine(backend, use_pallas, placement, routing, n_dev=8):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4, use_pallas=use_pallas)
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        mesh = make_mesh((n_dev, 1), ("data", "model"))
+        return FCVIEngine(idx, EngineConfig(k=5, batch_size=16), mesh=mesh,
+                          placement=placement, routing=routing)
+
+    def check_degraded(eng, dead):
+        s_h, i_h = eng.search(q, fq)             # healthy baseline
+        assert eng.stats.last_coverage.all()
+        eng.health.mark_dead(dead)
+        s_d, i_d = eng.search(q, fq)
+        cov = eng.stats.last_coverage.copy()
+        ref = fi.surviving_reference(eng)
+        s_r, i_r = ref.search(q, fq)
+        # 1) bit-identical to the ground truth over surviving rows
+        assert np.array_equal(i_d, i_r), "ids differ from surviving ref"
+        assert np.array_equal(s_d, s_r), "scores differ from surviving ref"
+        # 2) no dead row ever surfaces in degraded results
+        mask = fi.surviving_row_mask(eng)
+        delta_ok = i_d >= eng.index.size         # delta rows are durable
+        assert (mask[np.minimum(i_d, eng.index.size - 1)] | delta_ok).all()
+        # 3) coverage soundness: a query whose HEALTHY top-k contains a
+        #    dead row must carry the flag (the certificate may over-flag,
+        #    never under-flag)
+        main = i_h < eng.index.size
+        affected = np.zeros(len(q), bool)
+        for j in range(len(q)):
+            affected[j] = (~mask[i_h[j][main[j]]]).any()
+        if affected.any():
+            assert (~cov[affected]).all(), "coverage flag missed a query"
+        assert eng.stats.degraded_batches > 0
+        return int(affected.sum()), int((~cov).sum())
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend,use_pallas", [
+    ("flat", False), ("flat", True), ("ivf", False), ("ivf", True)])
+def test_dead_shard_bit_identity(backend, use_pallas):
+    """1 of 8 shards dead: serve everything, bit-identical to ground truth,
+    coverage flags sound — dense and routed, cluster and contiguous."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + f"""
+    combos = ([("cluster", "routed"), ("cluster", "dense"),
+               ("contiguous", "dense")] if {backend!r} == "flat"
+              else [("contiguous", "routed"), ("contiguous", "dense")])
+    for placement, routing in combos:
+        eng = make_engine({backend!r}, {use_pallas}, placement, routing)
+        affected, flagged = check_degraded(eng, [2])
+        print(placement, routing, "affected", affected, "flagged", flagged)
+    """)
+
+
+@pytest.mark.slow
+def test_two_dead_shards_and_incremental_death():
+    """Deaths accumulate without retracing the healthy path; the alive mask
+    is a traced argument, so 1 dead and then 2 dead reuse one trace."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    from repro.serve import engine as engine_mod
+    eng = make_engine("flat", False, "cluster", "routed")
+    eng.search(q, fq)
+    eng.health.mark_dead([1])
+    eng.search(q, fq)
+    traces_after_first_death = engine_mod.trace_count()
+    eng.health.mark_dead([6])
+    s_d, i_d = eng.search(q, fq)
+    assert engine_mod.trace_count() == traces_after_first_death, \\
+        "second death must not retrace (alive mask is a traced arg)"
+    ref = fi.surviving_reference(eng)
+    s_r, i_r = ref.search(q, fq)
+    assert np.array_equal(i_d, i_r) and np.array_equal(s_d, s_r)
+    """)
+
+
+@pytest.mark.slow
+def test_straggler_eviction_to_degraded_serving():
+    """A persistently slow shard is evicted by the health layer mid-serve and
+    subsequent results match the surviving reference."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    eng = make_engine("flat", False, "cluster", "routed")
+    eng.cfg.straggler_z = 2.0
+    from repro.serve.health import ShardHealth
+    eng.health = ShardHealth(8, straggler_z=2.0)
+    eng.fault_injector = fi.FaultInjector(slow_shards={5: 10.0})
+    rng = np.random.default_rng(1)
+    for _ in range(8):
+        qq = q + rng.normal(size=q.shape).astype(np.float32) * 0.01
+        eng.search(qq, fq)
+    assert eng.health.dead_shards() == [5]
+    assert eng.stats.straggler_evictions == 1
+    s_d, i_d = eng.search(q, fq)
+    ref = fi.surviving_reference(eng)
+    s_r, i_r = ref.search(q, fq)
+    assert np.array_equal(i_d, i_r) and np.array_equal(s_d, s_r)
+    """)
+
+
+@pytest.mark.slow
+def test_heal_restores_full_coverage():
+    """The acceptance criterion end to end: kill a shard, serve degraded,
+    heal onto the 7 survivors, and full-coverage results return —
+    bit-identical to a meshless engine over the full corpus."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    for placement, routing in [("cluster", "routed"), ("contiguous", "dense")]:
+        eng = make_engine("flat", False, placement, routing)
+        eng.health.mark_dead([3])
+        eng.search(q, fq)
+        assert not eng.stats.last_coverage.all()
+        with tempfile.TemporaryDirectory() as d:
+            assert eng.heal(d, q, fq) is True
+        assert eng._sharded.n_shards == 7
+        assert eng.stats.heals == 1
+        s, i = eng.search(q, fq)
+        assert eng.stats.last_coverage.all()
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat")
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        ref = FCVIEngine(idx, EngineConfig(k=5, batch_size=16))
+        s_r, i_r = ref.search(q, fq)
+        assert np.array_equal(i, i_r) and np.array_equal(s, s_r)
+        print(placement, routing, "healed")
+    """)
+
+
+@pytest.mark.slow
+def test_heal_background_thread():
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    eng = make_engine("ivf", False, "contiguous", "dense")
+    eng.health.mark_dead([0])
+    eng.search(q, fq)
+    with tempfile.TemporaryDirectory() as d:
+        t = eng.heal(d, q, fq, background=True)
+        t.join(timeout=600)
+        assert not t.is_alive()
+    assert eng.stats.heals == 1 and eng._sharded.n_shards == 7
+    eng.search(q, fq)
+    assert eng.stats.last_coverage.all()
+    """)
+
+
+@pytest.mark.slow
+def test_degraded_with_delta_buffer():
+    """Delta rows are host-durable: they keep serving (and merging) while a
+    shard is dead, and the surviving reference carries the same delta."""
+    run_in_subprocess(_SUBPROCESS_PRELUDE + """
+    eng = make_engine("flat", False, "cluster", "dense")
+    rng = np.random.default_rng(7)
+    nv = rng.normal(size=(20, corpus.spec.d)).astype(np.float32)
+    nf = corpus.filters[:20].copy()
+    eng.insert(nv, nf)
+    eng.health.mark_dead([4])
+    s_d, i_d = eng.search(q, fq)
+    ref = fi.surviving_reference(eng)
+    assert ref.delta_size() == 20
+    s_r, i_r = ref.search(q, fq)
+    assert np.array_equal(i_d, i_r) and np.array_equal(s_d, s_r)
+    """)

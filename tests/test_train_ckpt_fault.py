@@ -152,3 +152,122 @@ def test_microbatch_reassignment_covers_all():
     assert set(plan.values()) == {0, 1, 3}
     loads = [list(plan.values()).count(h) for h in (0, 1, 3)]
     assert max(loads) - min(loads) <= 1
+
+def test_single_host_fleet_never_straggles():
+    """A fleet of one has no peers to be slower than: fleet sd degenerates
+    and the z-score must not flag the only host."""
+    hb = fault.HeartbeatTracker(n_hosts=1, straggler_patience=2)
+    for step in range(6):
+        hb.record(0, step, 5.0)
+        assert hb.stragglers() == []
+
+
+def test_all_hosts_straggling_flags_none():
+    """Uniform slowness is not straggling — everyone IS the fleet."""
+    hb = fault.HeartbeatTracker(n_hosts=4, straggler_z=2.0,
+                                straggler_patience=2)
+    for step in range(6):
+        for h in range(4):
+            hb.record(h, step, 10.0)
+    assert hb.stragglers() == []
+
+
+def test_straggler_recovering_before_patience_not_flagged():
+    """The persistence count resets when the host rejoins the fleet pace
+    before ``straggler_patience`` consecutive slow checks accumulate."""
+    hb = fault.HeartbeatTracker(n_hosts=4, alpha=1.0, straggler_z=1.4,
+                                straggler_patience=3)
+    flagged = []
+    for step, slow in enumerate([True, True, False, True, True, False]):
+        for h in range(4):
+            t = 3.0 if (h == 1 and slow) else 1.0
+            hb.record(h, step, t)
+        flagged += hb.stragglers()
+    assert flagged == []
+
+
+def test_heartbeat_timeout_on_step_zero():
+    """A fresh tracker at step 0 has nobody silent — the never-recorded
+    sentinel must not count as ``timeout_steps`` of silence."""
+    hb = fault.HeartbeatTracker(n_hosts=4, timeout_steps=2)
+    assert hb.failures(current_step=0) == []
+    assert hb.failures(current_step=2) == []       # within the timeout
+    assert hb.failures(current_step=3) == [0, 1, 2, 3]  # now truly silent
+
+
+def test_mark_alive_resurrects_with_clean_straggler_record():
+    hb = fault.HeartbeatTracker(n_hosts=2, straggler_patience=1,
+                                straggler_z=0.5)
+    for step in range(3):
+        hb.record(0, step, 1.0)
+        hb.record(1, step, 9.0)
+    assert hb.stragglers() == [1]
+    hb.mark_dead([1])
+    assert hb.alive_hosts() == [0]
+    hb.mark_alive([1])
+    assert hb.alive_hosts() == [0, 1]
+    assert hb._strag_count[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity (per-array checksums, corrupt-step fallback)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_checksums_recorded(tmp_path):
+    import json
+    import zlib
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    manifest = json.loads(
+        (tmp_path / "step_00000001" / "manifest.json").read_text())
+    assert manifest["checksums"]["a"] == zlib.crc32(
+        np.arange(6, dtype=np.float32).tobytes())
+
+
+def test_corrupt_fallback_to_newest_intact(tmp_path):
+    tree1 = {"a": jnp.ones((4,))}
+    tree2 = {"a": jnp.full((4,), 2.0)}
+    ckpt.save(str(tmp_path), 1, tree1)
+    ckpt.save(str(tmp_path), 2, tree2)
+    npz = tmp_path / "step_00000002" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[: npz.stat().st_size // 2])  # torn
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        out, step, _ = ckpt.load(str(tmp_path))
+    assert step == 1
+    np.testing.assert_array_equal(out["a"], np.ones((4,)))
+
+
+def test_corrupt_explicit_step_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((4,))})
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    mpath.write_text("{ not json")
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.load(str(tmp_path), step=1)
+
+
+def test_checksum_mismatch_raises(tmp_path):
+    import json
+
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((4,))})
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["checksums"]["a"] ^= 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ckpt.CheckpointCorruptError, match="checksum"):
+        ckpt.load(str(tmp_path), step=1)
+
+
+def test_legacy_manifest_without_checksums_loads(tmp_path):
+    """Checkpoints written before integrity checksums existed still load
+    (verification is skipped, not failed)."""
+    import json
+
+    ckpt.save(str(tmp_path), 1, {"a": jnp.arange(4, dtype=jnp.float32)})
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    del manifest["checksums"]
+    mpath.write_text(json.dumps(manifest))
+    out, step, _ = ckpt.load(str(tmp_path))
+    assert step == 1
+    np.testing.assert_array_equal(out["a"], np.arange(4, dtype=np.float32))
