@@ -13,11 +13,19 @@ and corpus.
 Writes BENCH_query_path.json next to this file:
 
   {"results": [{backend, use_pallas, storage_dtype, batch, qps,
-                ms_per_query}, ...],
+                ms_per_query, bytes_per_query, effective_bandwidth_gbps,
+                recall_vs_fp32}, ...],
    "routed": [{backend, routing, filter_mix, qps, shard_skip_rate,
                router_fallback_frac}, ...],
    "legacy": {...}, "speedup_batch64_flat_vs_legacy": ...,
    "speedup_batch64_flat_vs_pr1_jnp": ...}
+
+``bytes_per_query`` is the engine's modeled HBM scan traffic (flat: the
+whole slab; IVF: the probed fraction; PQ: the code matrix) divided by
+served queries — the number that makes the fp32 -> bf16 -> int8 storage
+ladder visible. ``recall_vs_fp32`` compares each reduced-precision row's
+final top-k ids against the fp32 row of the same config (1.0 = the
+exact-refine pass fully recovered the fp32 ranking).
 
 ``--host-devices N`` forces N host (CPU) devices BEFORE jax initialises and
 adds mesh-sharded engine rows (flat + IVF on a 1-device and an N-device
@@ -197,6 +205,11 @@ def main():
     ap.add_argument("--host-devices", type=int, default=1,
                     help="force N host devices (set before jax init) and add "
                     "mesh-sharded engine rows on 1- and N-device meshes")
+    ap.add_argument("--storage-dtype", default=None,
+                    choices=["float32", "bfloat16", "int8"],
+                    help="pin every meshless flat/IVF row to one storage "
+                    "rung (CI smoke: --quick --storage-dtype int8 exercises "
+                    "the quantized scan + exact-refine path end to end)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_query_path.json "
                     "next to this script; CI smoke runs point this at a "
@@ -210,18 +223,28 @@ def main():
     # (backend, use_pallas, batch, storage_dtype, mesh_devices [0 = no mesh])
     combos = [("flat", False, 64, "float32", 0),
               ("flat", True, 64, "float32", 0),
-              ("flat", False, 64, "bfloat16", 0)]
+              ("flat", False, 64, "bfloat16", 0),
+              ("flat", False, 64, "int8", 0)]
     if not args.quick:
         combos += [("flat", False, 256, "float32", 0),
                    ("flat", True, 256, "float32", 0),
                    ("flat", True, 64, "bfloat16", 0),
+                   ("flat", True, 64, "int8", 0),
                    ("ivf", False, 64, "float32", 0),
                    ("ivf", True, 64, "float32", 0),
                    ("ivf", False, 256, "float32", 0),
                    ("ivf", True, 256, "float32", 0),
                    ("ivf", False, 64, "bfloat16", 0),
+                   ("ivf", False, 64, "int8", 0),
+                   ("ivf", True, 64, "int8", 0),
                    ("pq", False, 64, "float32", 0),
                    ("pq", True, 64, "float32", 0)]
+    if args.storage_dtype:
+        # CI smoke: pin every meshless row to one storage rung
+        combos = [(b, up, bt, args.storage_dtype, md) if md == 0 and
+                  b != "pq" else (b, up, bt, st, md)
+                  for (b, up, bt, st, md) in combos]
+        combos = list(dict.fromkeys(combos))
     ndev = min(args.host_devices, len(jax.devices()))
     if ndev > 1:
         # mesh-sharded engine rows: 1-device vs all-device mesh (host
@@ -235,6 +258,7 @@ def main():
                        ("ivf", True, 64, "float32", ndev)]
 
     results = []
+    fp32_ids = {}   # (backend, use_pallas, batch) -> fp32 final ids
     for backend, use_pallas, batch, storage_dtype, mesh_devices in combos:
         q, fq = sample_queries(corpus, batch, seed=1)
         q, fq = np.asarray(q), np.asarray(fq)
@@ -245,16 +269,33 @@ def main():
             eng._cache.clear()                 # measure compute, not cache
             return eng.search(queries, filters)
 
+        _, ids = run(q, fq)                    # warmup (jit compile)
+        ids = np.asarray(ids)
+        eng.stats = type(eng.stats)()          # count timed runs only
         t = time_search(run, q, fq, args.iters)
+        st = eng.stats
         row = dict(backend=backend, use_pallas=use_pallas,
                    storage_dtype=storage_dtype, batch=batch,
                    mesh_devices=mesh_devices,
-                   qps=batch / t, ms_per_query=1e3 * t / batch)
+                   qps=batch / t, ms_per_query=1e3 * t / batch,
+                   bytes_per_query=round(st.bytes_per_query),
+                   effective_bandwidth_gbps=round(
+                       st.effective_bandwidth_gbps, 3))
+        key = (backend, use_pallas, batch)
+        if storage_dtype == "float32" and mesh_devices == 0:
+            fp32_ids[key] = ids
+        elif mesh_devices == 0 and key in fp32_ids:
+            # post-refine recall of the reduced-precision rung vs fp32
+            row["recall_vs_fp32"] = round(
+                float((ids == fp32_ids[key]).mean()), 4)
         results.append(row)
         print(f"{backend:4s} pallas={int(use_pallas)} "
               f"st={storage_dtype:8s} batch={batch:3d} "
               f"mesh={mesh_devices} "
-              f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q")
+              f"qps={row['qps']:9.1f}  {row['ms_per_query']:.3f} ms/q  "
+              f"{row['bytes_per_query']/1e3:.0f} KB/q"
+              + (f"  recall={row['recall_vs_fp32']:.3f}"
+                 if "recall_vs_fp32" in row else ""))
 
     # routed vs dense sharded serving on filter-centric (cluster) placement:
     # alpha=2.0 strengthens the filter fold so selective traffic is
@@ -361,9 +402,10 @@ def main():
     print(f"legacy loop       batch= 64 qps={legacy['qps']:9.1f}  "
           f"{legacy['ms_per_query']:.3f} ms/q")
 
+    base_dtype = args.storage_dtype or "float32"
     new64 = next(r for r in results
                  if r["backend"] == "flat" and not r["use_pallas"]
-                 and r["batch"] == 64 and r["storage_dtype"] == "float32"
+                 and r["batch"] == 64 and r["storage_dtype"] == base_dtype
                  and r["mesh_devices"] == 0)
     out = dict(
         config=dict(
@@ -371,6 +413,11 @@ def main():
             host_devices=ndev,
             note=("use_pallas rows run the Pallas kernels in interpret mode "
                   "on non-TPU hosts (dispatch correctness, not TPU perf); "
+                  "bytes_per_query / effective_bandwidth_gbps are the "
+                  "engine's MODELED HBM scan traffic (slab array sizes x "
+                  "probed fraction) per served query — bf16 halves and int8 "
+                  "quarters the scanned bytes vs fp32, with recall_vs_fp32 "
+                  "= 1.0 after the exact-refine pass; "
                   "the engine batch step is one jax.jit-compiled function; "
                   "mesh_devices>0 rows run the shard_map sharded step — "
                   "forced host devices share cores, so those rows measure "

@@ -1,7 +1,23 @@
-"""Roofline table generator — reads the dry-run artifacts (deliverable g).
+"""Roofline table generator — dry-run artifacts + the storage-dtype ladder.
+
+Two tables:
+
+1. The dry-run artifact table (deliverable g): per-arch compute/memory/
+   collective roofline terms read from ``artifacts/dryrun/*_<mesh>.json``.
+
+2. The serving-scan storage ladder: an analytic roofline of the engine's
+   candidate-generation scan at each storage rung (fp32 / bf16 / int8 codes
+   + per-row fp32 scales / PQ codes). The scan streams the slab once per
+   batch and does 2*d FLOPs per row per query, so its arithmetic intensity
+   scales with BATCH / bytes-per-row — quantization moves the scan toward
+   the compute roof at fixed batch, or equivalently lowers the batch size
+   at which it stops being HBM-bound. Uses the v5e constants from
+   ``repro.launch.hlo_analysis`` (197 TFLOP/s, 819 GB/s).
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
-Writes artifacts/roofline_table.md and prints a summary.
+           [--d 64] [--batch 64 256] [--pq-m 8]
+Writes artifacts/roofline_table_<mesh>.md (artifact table, when artifacts
+exist) and artifacts/roofline_storage_ladder.md; prints both.
 """
 from __future__ import annotations
 
@@ -9,6 +25,8 @@ import argparse
 import glob
 import json
 import os
+
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
@@ -42,20 +60,100 @@ def fmt_table(rows):
     return "\n".join(out)
 
 
+def storage_rungs(d: int, pq_m: int):
+    """Bytes streamed per corpus row at each storage rung of the scan.
+
+    Every rung also streams the row's fp32 squared norm (4 B); the int8
+    rung adds its per-row fp32 dequant scale; PQ streams code bytes only
+    (its LUT build is O(ksub*d) per query, amortised over n rows and
+    ignored here).
+    """
+    return [
+        ("float32", 4 * d + 4),
+        ("bfloat16", 2 * d + 4),
+        ("int8", d + 4 + 4),
+        (f"pq (M={pq_m})", pq_m),
+    ]
+
+
+def ladder_rows(d: int, batches, pq_m: int):
+    """Analytic roofline of the batched slab scan per storage rung.
+
+    Per corpus row and batch of b queries the scan does ``2*d*b`` FLOPs
+    (fused multiply-add dot against each query) over ``bytes_row`` streamed
+    bytes, so arithmetic intensity AI = 2*d*b / bytes_row FLOP/B. The rung
+    is HBM-bound while AI < PEAK_FLOPS / HBM_BW (~240 FLOP/B on v5e).
+    """
+    ridge = PEAK_FLOPS / HBM_BW
+    rows = []
+    for name, bytes_row in storage_rungs(d, pq_m):
+        flops_row = 2.0 * d            # per query in the batch
+        for b in batches:
+            ai = flops_row * b / bytes_row
+            bound = "memory" if ai < ridge else "compute"
+            # time per (row, batch) under the binding roof, normalised to
+            # rows/s per device at this batch size
+            t_mem = bytes_row / HBM_BW
+            t_cmp = flops_row * b / PEAK_FLOPS
+            rows_per_s = 1.0 / max(t_mem, t_cmp)
+            rows.append(dict(storage=name, bytes_per_row=bytes_row, batch=b,
+                             arithmetic_intensity=ai, bound=bound,
+                             grows_per_s=rows_per_s / 1e9))
+    return rows
+
+
+def fmt_ladder(rows):
+    hdr = ("| storage | bytes/row | batch | AI (FLOP/B) | bound | "
+           "roof Grows/s/dev |")
+    sep = "|" + "---|" * 6
+    out = [hdr, sep]
+    for r in rows:
+        out.append(f"| {r['storage']} | {r['bytes_per_row']} "
+                   f"| {r['batch']} | {r['arithmetic_intensity']:.1f} "
+                   f"| **{r['bound']}** | {r['grows_per_s']:.2f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--d", type=int, default=64,
+                    help="vector dim for the storage-ladder model")
+    ap.add_argument("--batch", type=int, nargs="+", default=[64, 256],
+                    help="batch sizes for the storage-ladder model")
+    ap.add_argument("--pq-m", type=int, default=8)
     args = ap.parse_args()
+
+    art_dir = os.path.dirname(ART)
+    os.makedirs(art_dir, exist_ok=True)
+
     rows = load(args.mesh)
-    if not rows:
-        print(f"no artifacts for mesh {args.mesh}; run repro.launch.dryrun first")
-        return
-    table = fmt_table(rows)
-    out = os.path.join(os.path.dirname(ART), f"roofline_table_{args.mesh}.md")
+    if rows:
+        table = fmt_table(rows)
+        out = os.path.join(art_dir, f"roofline_table_{args.mesh}.md")
+        with open(out, "w") as f:
+            f.write(f"# Roofline — {args.mesh} "
+                    f"(per-device terms, v5e constants)\n\n")
+            f.write(table + "\n")
+        print(table)
+        print(f"\nwritten: {out}")
+    else:
+        print(f"no artifacts for mesh {args.mesh}; skipping artifact table "
+              f"(run repro.launch.dryrun to generate)")
+
+    ladder = ladder_rows(args.d, args.batch, args.pq_m)
+    lt = fmt_ladder(ladder)
+    out = os.path.join(art_dir, "roofline_storage_ladder.md")
+    ridge = PEAK_FLOPS / HBM_BW
     with open(out, "w") as f:
-        f.write(f"# Roofline — {args.mesh} (per-device terms, v5e constants)\n\n")
-        f.write(table + "\n")
-    print(table)
+        f.write(f"# Serving-scan roofline — storage-dtype ladder "
+                f"(d={args.d}, v5e: ridge {ridge:.0f} FLOP/B)\n\n")
+        f.write(lt + "\n\n")
+        f.write("AI = 2*d*batch / bytes_per_row. A rung left of the ridge "
+                "point is HBM-bound: its roof throughput scales inversely "
+                "with bytes/row, which is what the int8 rung buys.\n")
+    print()
+    print(lt)
     print(f"\nwritten: {out}")
 
 

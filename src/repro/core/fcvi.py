@@ -23,9 +23,11 @@ threads through the whole query path —
   * re-scoring (``rescore`` and ``multi_probe_query``) runs the fused
     combined-cosine kernel ``ops.rescore``.
 
-``FCVIConfig.storage_dtype="bfloat16"`` additionally stores the flat/IVF
-corpus slabs at half width (fp32 accumulation + exact-refine keep orderings
-correct) for ~2x effective HBM bandwidth on the scan-bound paths.
+``FCVIConfig.storage_dtype`` additionally selects the flat/IVF slab storage
+rung: "bfloat16" stores at half width for ~2x effective HBM bandwidth on the
+scan-bound paths, "int8" at quarter width with one fp32 dequant scale per
+row (``repro.index.quant``). Both keep fp32 accumulation plus the
+exact-refine pass, so orderings stay correct.
 
 With ``use_pallas=False`` (the default) the same call graph runs the jnp
 reference implementations; the two paths return identical results (see
@@ -67,9 +69,10 @@ class FCVIConfig:
     Dispatch-changing fields (results stay IDENTICAL, only the executed
     code changes): ``use_pallas`` routes the query path through the Pallas
     kernels in ``repro.kernels.ops`` (False = pure-jnp reference), and
-    ``storage_dtype`` selects the corpus slab precision ("float32" or
-    "bfloat16"; reduced storage keeps fp32 norms/accumulation plus the
-    exact-refine pass, so top-k ordering is exact w.r.t. stored rows).
+    ``storage_dtype`` selects the corpus slab precision ("float32",
+    "bfloat16" or "int8"; reduced storage keeps fp32 norms/accumulation
+    plus the exact-refine pass, so top-k ordering is exact w.r.t. stored
+    rows — int8 additionally carries one fp32 scale per row).
     """
 
     alpha: float = 1.0
@@ -87,10 +90,10 @@ class FCVIConfig:
     normalize: bool = True
     use_pallas: bool = False    # route the query path through Pallas kernels
     storage_dtype: str = "float32"  # corpus storage for flat/IVF slabs
-                                    # ("bfloat16" halves HBM traffic; scores
+                                    # ("bfloat16" halves HBM traffic, "int8"
+                                    # quarters it with per-row scales; scores
                                     # accumulate in fp32 and the exact-refine
                                     # pass keeps top-k ordering correct)
-
     def resolved_alpha(self) -> float:
         if self.auto_alpha:
             return float(theory.optimal_alpha(self.lam))
@@ -99,9 +102,9 @@ class FCVIConfig:
     def resolved_storage_dtype(self):
         """Backend build-time dtype: None means keep the native fp32 (the
         backends' "don't cast" sentinel), else the reduced-precision dtype."""
-        if self.storage_dtype not in ("float32", "bfloat16"):
+        if self.storage_dtype not in ("float32", "bfloat16", "int8"):
             raise ValueError(
-                f"storage_dtype must be float32 or bfloat16, got "
+                f"storage_dtype must be float32, bfloat16 or int8, got "
                 f"{self.storage_dtype!r}")
         if self.storage_dtype == "float32":
             return None
@@ -199,6 +202,15 @@ def combined_score(cand_v: Array, cand_f: Array, qn: Array, fqn: Array,
     block multiple; zero rows score 0 and are sliced off).
     """
     if not use_pallas:
+        # Bit-stability contract: every serving path (single-device gather,
+        # one-hot psum gather, shard-local gather in the gather-free step)
+        # must feed this function GATHER-PRODUCED candidate tiles.  The
+        # elementwise mul+sum cosine reduces each row independently, so a
+        # candidate scores to the same bits regardless of its k-position in
+        # the tile — unlike a dot_general contraction, whose CPU lowering
+        # handles main-loop vs remainder k-rows differently.  Gather outputs
+        # are materialized, so the reduction cannot fuse into a
+        # path-dependent producer and reorder the sum.
         s_v = cosine_sim(cand_v, qn[:, None, :])
         s_f = cosine_sim(cand_f, fqn[:, None, :])
         return lam * s_v + (1.0 - lam) * s_f
@@ -331,9 +343,13 @@ def index_state(index: FCVIIndex) -> dict:
     b = index.backend
     if cfg.backend == "flat":
         bstate = {"vectors": b.vectors}
+        if b.scales is not None:
+            bstate["scales"] = b.scales
     elif cfg.backend == "ivf":
         bstate = {"vectors": b.vectors, "centroids": b.centroids,
                   "lists": b.lists, "list_sizes": b.list_sizes}
+        if b.scales is not None:
+            bstate["scales"] = b.scales
     else:
         bstate = {"codebooks": b.codebooks, "codes": b.codes,
                   "coarse_centers": b.coarse_centers,
@@ -359,24 +375,37 @@ def index_from_state(config: FCVIConfig, state: dict) -> FCVIIndex:
         centers=jnp.asarray(t["centers"]) if "centers" in t else None,
         proj=jnp.asarray(t["proj"]) if "proj" in t else None,
     )
+    from repro.index import quant
+
     b = state["backend"]
     if config.backend == "flat":
         vectors = jnp.asarray(b["vectors"])
-        backend = flat_mod.FlatIndex(
-            vectors=vectors,
-            sq_norms=jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1))
+        scales = jnp.asarray(b["scales"]) if "scales" in b else None
+        if scales is not None:
+            sq_norms = quant.sq_norms_of(vectors, scales)
+        else:
+            sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+        backend = flat_mod.FlatIndex(vectors=vectors, sq_norms=sq_norms,
+                                     scales=scales)
     elif config.backend == "ivf":
         from repro.index.slab import build_grouped
 
         vectors = jnp.asarray(b["vectors"])
         lists = jnp.asarray(b["lists"])
-        sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+        scales = jnp.asarray(b["scales"]) if "scales" in b else None
+        if scales is not None:
+            sq_norms = quant.sq_norms_of(vectors, scales)
+            grouped_scales = ivf_mod._group_scales(scales, lists)
+        else:
+            sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+            grouped_scales = None
         grouped, grouped_sq, valid = build_grouped(vectors, sq_norms, lists)
         backend = ivf_mod.IVFIndex(
             vectors=vectors, sq_norms=sq_norms,
             centroids=jnp.asarray(b["centroids"]), lists=lists,
             list_sizes=jnp.asarray(b["list_sizes"]),
-            grouped=grouped, grouped_sq=grouped_sq, valid=valid)
+            grouped=grouped, grouped_sq=grouped_sq, valid=valid,
+            scales=scales, grouped_scales=grouped_scales)
     else:
         codebooks = jnp.asarray(b["codebooks"])
         coarse_centers = jnp.asarray(b["coarse_centers"])

@@ -17,19 +17,19 @@ than ``k`` reachable candidates) carry ``-inf`` scores.
 
 Storage dtype: the flat/IVF backends accept a build-time ``storage_dtype``
 (threaded from ``FCVIConfig.storage_dtype``) and may hold the corpus at
-reduced precision (bf16). Scores are still fp32 — squared norms are fp32
-computed from the stored values and matmuls accumulate fp32 — so the
-contract above is unchanged; returned orderings are exact w.r.t. the stored
-rows. ``search`` must stay traceable under ``jax.jit`` with static ``k`` and
-``use_pallas``: the serving engine inlines it into its single jitted
-per-batch step.
+reduced precision — bf16, or int8 codes with per-row fp32 dequant scales
+(``repro.index.quant``). Scores are still fp32 — squared norms are fp32
+computed from the stored (dequantized) values and matmuls accumulate fp32 —
+so the contract above is unchanged; returned orderings are exact w.r.t. the
+stored rows. ``search`` must stay traceable under ``jax.jit`` with static
+``k`` and ``use_pallas``: the serving engine inlines it into its single
+jitted per-batch step.
 
-Serving layout: backends that can serve mesh-sharded (flat, IVF) also expose
-``slab()`` returning their ``repro.index.slab`` layout view — the object the
-device-mesh serving layer shards (``slab.shard(mesh, rules)``) and the
-checkpoint layer rematerialises at restore time. ``slab()`` is deliberately
-NOT part of this protocol: PQ serves unsharded for now, and the engine
-falls back accordingly.
+Serving layout: every backend (flat, IVF, PQ) also exposes ``slab()``
+returning its ``repro.index.slab`` layout view — the object the device-mesh
+serving layer shards (``slab.shard(mesh, rules)``) and the checkpoint layer
+rematerialises at restore time. ``slab()`` is deliberately NOT part of this
+protocol: it is a serving-layer concern, and the engine duck-types it.
 """
 from __future__ import annotations
 

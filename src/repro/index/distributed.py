@@ -91,6 +91,70 @@ def tree_merge_topk(vals: Array, idx: Array, axes: Sequence[str],
     return vals, idx
 
 
+def merge_over_axis_rows(vals: Array, idx: Array, rows: Sequence[Array],
+                         axis: str, k: int):
+    """``merge_over_axis`` that also carries per-candidate PAYLOAD ROWS.
+
+    ``rows`` is a tuple of (..., kl, dim) arrays aligned with the candidate
+    axis (e.g. the winners' re-rank vectors and filter values emitted by a
+    shard-local scan). The (vals, idx) outputs are computed with exactly the
+    same pooled top-k as ``merge_over_axis`` — bit-identical — and every
+    rows array is gathered and selected with the same winner positions, so
+    the merged candidates arrive WITH their rows and no cross-shard gather
+    (mask + psum) is needed afterwards. Pool slots added when ``k`` exceeds
+    the pool carry zero rows (matching the -inf / id-0 fill).
+    """
+    g_vals = jax.lax.all_gather(vals, axis)  # (n_ax, q, kl)
+    g_idx = jax.lax.all_gather(idx, axis)
+    n_ax = g_vals.shape[0]
+    kl = vals.shape[-1]
+    total = n_ax * kl
+    g_vals = jnp.moveaxis(g_vals, 0, -2).reshape(*vals.shape[:-1], total)
+    g_idx = jnp.moveaxis(g_idx, 0, -2).reshape(*idx.shape[:-1], total)
+    if k > total:
+        pad = k - total
+        g_vals = jnp.concatenate(
+            [g_vals, jnp.full((*g_vals.shape[:-1], pad), -jnp.inf,
+                              g_vals.dtype)], axis=-1)
+        g_idx = jnp.concatenate(
+            [g_idx, jnp.zeros((*g_idx.shape[:-1], pad), g_idx.dtype)],
+            axis=-1)
+    top_vals, pos = jax.lax.top_k(g_vals, k)
+    top_idx = jnp.take_along_axis(g_idx, pos, axis=-1)
+    out_rows = []
+    for r in rows:
+        g = jax.lax.all_gather(r, axis)      # (n_ax, ..., kl, dim)
+        g = jnp.moveaxis(g, 0, -3).reshape(*r.shape[:-2], total, r.shape[-1])
+        if k > total:
+            g = jnp.concatenate(
+                [g, jnp.zeros((*g.shape[:-2], k - total, g.shape[-1]),
+                              g.dtype)], axis=-2)
+        out_rows.append(jnp.take_along_axis(g, pos[..., None], axis=-2))
+    return top_vals, top_idx, tuple(out_rows)
+
+
+def tree_merge_topk_rows(vals: Array, idx: Array, rows: Sequence[Array],
+                         axes: Sequence[str], sizes: Sequence[int], k: int):
+    """``tree_merge_topk`` carrying payload rows through every merge stage.
+
+    Same staged reduction (and bit-identical (vals, idx)) as
+    ``tree_merge_topk``; the rows ride along via ``merge_over_axis_rows``.
+    This is the gather-free alternative to merging ids and then gathering
+    rows with a masked psum: the all-gathers here move only (k x fan-in)
+    candidate rows per stage, and no all-reduce appears in the trace.
+    """
+    rows = tuple(rows)
+    for ax, n_ax in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
+        keep = min(k, n_ax * vals.shape[-1])
+        vals, idx, rows = merge_over_axis_rows(vals, idx, rows, ax, keep)
+    if vals.shape[-1] < k:
+        pad = k - vals.shape[-1]
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+        rows = tuple(jnp.pad(r, ((0, 0), (0, pad), (0, 0))) for r in rows)
+    return vals, idx, rows
+
+
 def sharded_search_fn(mesh: Mesh, shard_axes: Sequence[str], k: int,
                       k_local: int = 0):
     """Build a shard_map'd exact search over a corpus sharded on shard_axes.

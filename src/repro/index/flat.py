@@ -31,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.index import quant
 from repro.kernels import ops
 
 Array = jax.Array
@@ -43,13 +44,19 @@ REFINE_PAD = 8
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class FlatIndex:
-    """Corpus matrix + precomputed squared norms."""
+    """Corpus matrix + precomputed squared norms.
 
-    vectors: Array   # (n, d)
-    sq_norms: Array  # (n,)
+    ``scales`` is the int8 storage rung's per-row dequantization scale
+    (None for float32/bfloat16 storage): stored rows dequantize as
+    ``vectors.astype(f32) * scales[:, None]``.
+    """
+
+    vectors: Array   # (n, d) fp32 / bf16 / int8 codes
+    sq_norms: Array  # (n,) fp32, of the (dequantized) stored rows
+    scales: Optional[Array] = None  # (n,) fp32 per-row scales (int8 only)
 
     def tree_flatten(self):
-        return (self.vectors, self.sq_norms), None
+        return (self.vectors, self.sq_norms, self.scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -68,21 +75,34 @@ class FlatIndex:
         """SearchBackend protocol entry point."""
         return search(self, queries, k, use_pallas=use_pallas, **opts)
 
+    def search_rows(self, queries: Array, k: int, payload_v: Array,
+                    payload_f: Array, *, use_pallas: bool = False, **opts):
+        """Gather-free SearchBackend entry point (rows, not just ids)."""
+        return search_rows(self, queries, k, payload_v, payload_f,
+                           use_pallas=use_pallas, **opts)
+
     def slab(self):
         """The serving-layout view of this index (see ``repro.index.slab``):
         what the mesh-sharding and checkpoint layers consume."""
         from repro.index.slab import FlatSlab
 
-        return FlatSlab(vectors=self.vectors, sq_norms=self.sq_norms)
+        return FlatSlab(vectors=self.vectors, sq_norms=self.sq_norms,
+                        scales=self.scales)
 
 
 def build(vectors: Array, storage_dtype=None) -> FlatIndex:
-    """``storage_dtype`` (e.g. bfloat16) stores the corpus at reduced
-    precision for ~2x effective HBM bandwidth on the scan. Squared norms are
-    computed in fp32 FROM the cast values, so candidate scores are exact for
-    the stored corpus; the exact-refine pass then keeps top-k ordering
-    correct w.r.t. the stored rows (accumulation stays fp32 throughout)."""
+    """``storage_dtype`` (bfloat16 or int8) stores the corpus at reduced
+    precision for 2x / 4x effective HBM bandwidth on the scan. Squared norms
+    are computed in fp32 FROM the stored (cast or dequantized) values, so
+    candidate scores are exact for the stored corpus; the exact-refine pass
+    then keeps top-k ordering correct w.r.t. the stored rows (accumulation
+    stays fp32 throughout). int8 storage additionally carries one fp32
+    scale per row (see ``repro.index.quant``)."""
     vectors = jnp.asarray(vectors)
+    if quant.is_quantized(storage_dtype):
+        codes, scales = quant.quantize_rows(vectors)
+        return FlatIndex(vectors=codes, sq_norms=quant.sq_norms_of(codes, scales),
+                         scales=scales)
     if storage_dtype is not None:
         vectors = vectors.astype(storage_dtype)
     sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
@@ -117,12 +137,16 @@ def merge_topk(vals_a: Array, idx_a: Array, vals_b: Array, idx_b: Array, k: int)
 
 
 def _exact_refine(vectors: Array, queries: Array, cand_idx: Array, k: int,
-                  mask: Optional[Array] = None):
+                  mask: Optional[Array] = None,
+                  scales: Optional[Array] = None):
     """Re-score gathered candidates with a direct (q - x)^2 pass, top-k.
 
     Runs in fp32 regardless of the storage dtype: bf16-stored rows are cast
-    up, so the refined ordering is exact w.r.t. the stored corpus."""
+    up and int8 rows are dequantized with their per-row ``scales``, so the
+    refined ordering is exact w.r.t. the stored corpus."""
     rows = vectors[cand_idx].astype(jnp.float32)              # (q, kk, d)
+    if scales is not None:
+        rows = rows * scales[cand_idx][..., None]
     d2 = jnp.sum((queries[:, None, :] - rows) ** 2, axis=-1)
     if mask is not None:
         d2 = jnp.where(mask[cand_idx], d2, jnp.inf)
@@ -130,11 +154,20 @@ def _exact_refine(vectors: Array, queries: Array, cand_idx: Array, k: int,
     return vals, jnp.take_along_axis(cand_idx, pos, axis=-1)
 
 
+def _refine_carried(scan_rows: Array, queries: Array, k: int):
+    """Exact refine over KERNEL-CARRIED candidate rows (already dequantized
+    fp32): same arithmetic as ``_exact_refine``, minus the HBM gather.
+    Returns (vals, pos) — pos indexes the carried candidate axis."""
+    d2 = jnp.sum((queries[:, None, :] - scan_rows) ** 2, axis=-1)
+    return jax.lax.top_k(-d2, k)
+
+
 def _pallas_candidates(index: FlatIndex, queries: Array, kk: int,
                        block_rows: int = 128, block_q: int = 64) -> Array:
     """Candidate ids via the fused Pallas kernel (padding handled by ops)."""
     _, idx = ops.score_topk_padded(index.vectors, index.sq_norms, queries, kk,
-                                   block_rows=block_rows, block_q=block_q)
+                                   block_rows=block_rows, block_q=block_q,
+                                   scales=index.scales)
     return idx
 
 
@@ -155,40 +188,88 @@ def search(index: FlatIndex, queries: Array, k: int, block_rows: int = 0,
 
     if use_pallas:
         cand = _pallas_candidates(index, queries, kk)
-        return _exact_refine(index.vectors, queries, cand, k_out)
+        return _exact_refine(index.vectors, queries, cand, k_out,
+                             scales=index.scales)
 
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
 
-    def score_block(rows: Array, row_sq: Array) -> Array:
-        # negative squared distance (higher is better)
-        return -(q2 - 2.0 * queries @ rows.T + row_sq[None, :])
+    def score_block(rows: Array, row_sq: Array,
+                    row_scale: Optional[Array] = None) -> Array:
+        # negative squared distance (higher is better); the per-row int8
+        # scale multiplies the matmul OUTPUT column (same formula as the
+        # Pallas kernel, so pallas/jnp stay in lockstep)
+        dot = queries @ rows.astype(queries.dtype).T
+        if row_scale is not None:
+            dot = dot * row_scale[None, :]
+        return -(q2 - 2.0 * dot + row_sq[None, :])
 
     if block_rows <= 0 or block_rows >= n:
-        scores = score_block(index.vectors, index.sq_norms)
+        scores = score_block(index.vectors, index.sq_norms, index.scales)
         _, cand = jax.lax.top_k(scores, kk)
-        return _exact_refine(index.vectors, queries, cand, k_out)
+        return _exact_refine(index.vectors, queries, cand, k_out,
+                             scales=index.scales)
 
     if n % block_rows != 0:
         raise ValueError(f"block_rows={block_rows} must divide n={n}")
     nblk = n // block_rows
     vecs = index.vectors.reshape(nblk, block_rows, index.dim)
     sqs = index.sq_norms.reshape(nblk, block_rows)
+    scls = (None if index.scales is None
+            else index.scales.reshape(nblk, block_rows))
     kb = min(kk, block_rows)
 
     def body(carry, blk):
         run_vals, run_idx = carry
-        rows, row_sq, blk_id = blk
-        s = score_block(rows, row_sq)
+        rows, row_sq, row_scale, blk_id = blk
+        s = score_block(rows, row_sq, row_scale)
         v, i = jax.lax.top_k(s, kb)
         i = i + blk_id * block_rows
         return merge_topk(run_vals, run_idx, v, i, kk), None
 
     init_vals = jnp.full((queries.shape[0], kk), -jnp.inf, queries.dtype)
     init_idx = jnp.zeros((queries.shape[0], kk), jnp.int32)
-    (_, cand), _ = jax.lax.scan(
-        body, (init_vals, init_idx), (vecs, sqs, jnp.arange(nblk))
-    )
-    return _exact_refine(index.vectors, queries, cand, k_out)
+    blk_ids = jnp.arange(nblk)
+    if scls is None:
+        def body_ns(carry, blk):
+            rows, row_sq, blk_id = blk
+            return body(carry, (rows, row_sq, None, blk_id))
+        (_, cand), _ = jax.lax.scan(
+            body_ns, (init_vals, init_idx), (vecs, sqs, blk_ids))
+    else:
+        (_, cand), _ = jax.lax.scan(
+            body, (init_vals, init_idx), (vecs, sqs, scls, blk_ids))
+    return _exact_refine(index.vectors, queries, cand, k_out,
+                         scales=index.scales)
+
+
+@partial(jax.jit, static_argnames=("k", "use_pallas"))
+def search_rows(index: FlatIndex, queries: Array, k: int, payload_v: Array,
+                payload_f: Array, *, use_pallas: bool = False):
+    """Gather-free top-k: returns the winners' PAYLOAD ROWS with the ids.
+
+    payload_v (n, dv) / payload_f (n, m) are row-aligned with the corpus
+    (for serving: the normalized originals used by combined-score re-rank).
+    Returns (scores (q,k), ids (q,k), rows_v (q,k,dv), rows_f (q,k,m)) with
+    (scores, ids) bit-identical to ``search``. On the Pallas path the rows
+    ride out of the scoring kernel's VMEM (no HBM gather); the jnp reference
+    path gathers by id, which is the semantic definition of the output.
+    """
+    n = index.size
+    k_out = min(k, n)
+    kk = min(n, k_out + REFINE_PAD)
+
+    if use_pallas:
+        _, cand, scan_rows, rows_v, rows_f = ops.score_topk_rows_padded(
+            index.vectors, index.sq_norms, payload_v, payload_f, queries, kk,
+            scales=index.scales)
+        vals, pos = _refine_carried(scan_rows, queries, k_out)
+        ids = jnp.take_along_axis(cand, pos, axis=-1)
+        rows_v = jnp.take_along_axis(rows_v, pos[..., None], axis=1)
+        rows_f = jnp.take_along_axis(rows_f, pos[..., None], axis=1)
+        return vals, ids, rows_v, rows_f
+
+    vals, ids = search(index, queries, k, use_pallas=False)
+    return vals, ids, payload_v[ids], payload_f[ids]
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -201,8 +282,12 @@ def search_masked(index: FlatIndex, queries: Array, k: int, mask: Array):
     k_out = min(k, n)
     kk = min(n, k_out + REFINE_PAD)
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
-    scores = -(q2 - 2.0 * queries @ index.vectors.T + index.sq_norms[None, :])
+    dot = queries @ index.vectors.astype(queries.dtype).T
+    if index.scales is not None:
+        dot = dot * index.scales[None, :]
+    scores = -(q2 - 2.0 * dot + index.sq_norms[None, :])
     scores = jnp.where(mask[None, :], scores, -jnp.inf)
     _, cand = jax.lax.top_k(scores, kk)
-    vals, idx = _exact_refine(index.vectors, queries, cand, k_out, mask=mask)
+    vals, idx = _exact_refine(index.vectors, queries, cand, k_out, mask=mask,
+                              scales=index.scales)
     return jnp.where(jnp.isinf(vals), -jnp.inf, vals), idx

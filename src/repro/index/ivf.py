@@ -18,12 +18,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clustering import kmeans, assign
+from repro.index import quant
 from repro.index.slab import build_grouped
 from repro.kernels import ops
 
@@ -41,11 +43,13 @@ class IVFIndex:
     grouped: Array     # (nlist, max_list, d) corpus grouped by list (serving)
     grouped_sq: Array  # (nlist, max_list)
     valid: Array       # (nlist, max_list) float 0/1 (1 = real row)
+    scales: Optional[Array] = None          # (n,) int8 per-row scales
+    grouped_scales: Optional[Array] = None  # (nlist, max_list)
 
     def tree_flatten(self):
         return (self.vectors, self.sq_norms, self.centroids, self.lists,
                 self.list_sizes, self.grouped, self.grouped_sq,
-                self.valid), None
+                self.valid, self.scales, self.grouped_scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -68,6 +72,14 @@ class IVFIndex:
         """SearchBackend protocol entry point."""
         return search(self, queries, k, use_pallas=use_pallas, **opts)
 
+    def search_rows(self, queries: Array, k: int, payload_v: Array,
+                    payload_f: Array, *, grouped_pv=None, grouped_pf=None,
+                    use_pallas: bool = False, **opts):
+        """Gather-free SearchBackend entry point (rows, not just ids)."""
+        return search_rows(self, queries, k, payload_v, payload_f,
+                           grouped_pv, grouped_pf, use_pallas=use_pallas,
+                           **opts)
+
     def slab(self):
         """The serving-layout view of this index (see ``repro.index.slab``):
         what the mesh-sharding and checkpoint layers consume."""
@@ -75,7 +87,7 @@ class IVFIndex:
 
         return IVFSlab(centroids=self.centroids, lists=self.lists,
                        grouped=self.grouped, grouped_sq=self.grouped_sq,
-                       valid=self.valid)
+                       valid=self.valid, grouped_scales=self.grouped_scales)
 
 
 # serving-layout materialisation lives with the layout type in index.slab
@@ -87,10 +99,12 @@ def build(vectors: Array, nlist: int, rng: Array | None = None,
           storage_dtype=None) -> IVFIndex:
     """Train coarse quantizer and materialise both list layouts (host-side).
 
-    ``storage_dtype`` (e.g. bfloat16) stores the corpus + serving slabs at
-    reduced precision (~2x effective HBM bandwidth on the probed scans); the
-    quantizer is always trained in fp32 and squared norms are fp32 computed
-    FROM the cast values, so slab scores stay exact for the stored rows."""
+    ``storage_dtype`` (bfloat16 or int8) stores the corpus + serving slabs at
+    reduced precision (2x / 4x effective HBM bandwidth on the probed scans);
+    the quantizer is always trained in fp32 and squared norms are fp32
+    computed FROM the stored (cast or dequantized) values, so slab scores
+    stay exact for the stored rows. int8 additionally carries per-row scales
+    in both layouts (``scales`` row-aligned, ``grouped_scales`` grouped)."""
     vectors = jnp.asarray(vectors, jnp.float32)
     if rng is None:
         rng = jax.random.PRNGKey(0)
@@ -106,10 +120,17 @@ def build(vectors: Array, nlist: int, rng: Array | None = None,
         lists[j, : len(b)] = b
         sizes[j] = len(b)
     lists = jnp.asarray(lists)
-    if storage_dtype is not None:
-        vectors = vectors.astype(storage_dtype)
-    sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+    scales = grouped_scales = None
+    if quant.is_quantized(storage_dtype):
+        vectors, scales = quant.quantize_rows(vectors)
+        sq_norms = quant.sq_norms_of(vectors, scales)
+    else:
+        if storage_dtype is not None:
+            vectors = vectors.astype(storage_dtype)
+        sq_norms = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
     grouped, grouped_sq, valid = _grouped_slabs(vectors, sq_norms, lists)
+    if scales is not None:
+        grouped_scales = _group_scales(scales, lists)
     return IVFIndex(
         vectors=vectors,
         sq_norms=sq_norms,
@@ -119,7 +140,17 @@ def build(vectors: Array, nlist: int, rng: Array | None = None,
         grouped=grouped,
         grouped_sq=grouped_sq,
         valid=valid,
+        scales=scales,
+        grouped_scales=grouped_scales,
     )
+
+
+def _group_scales(scales: Array, lists: Array) -> Array:
+    """Group per-row scales by list like ``build_grouped`` groups rows
+    (invalid slots get scale 1.0 — they are masked by ``valid`` anyway,
+    but a unit scale keeps any dequant of them finite)."""
+    safe = jnp.maximum(lists, 0)
+    return jnp.where(lists >= 0, scales[safe], 1.0)
 
 
 @partial(jax.jit, static_argnames=("k", "nprobe", "use_pallas"))
@@ -143,7 +174,7 @@ def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8,
         uniq, member = ops.dedup_probes(probe.astype(jnp.int32), index.nlist)
         vals, flat_ids = ops.ivf_score_topk_dedup(
             index.grouped, index.grouped_sq, index.valid, uniq, member,
-            queries, k)
+            queries, k, scales=index.grouped_scales)
         cand = index.lists.reshape(-1)[flat_ids]        # -1 on padded slots
         vals = vals - q2                                # back to -||q - x||^2
         idx = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(cand, 0))
@@ -158,7 +189,10 @@ def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8,
         safe = jnp.where(valid, cand, 0)
         rows = index.vectors[safe]                        # (c, d)
         row_sq = index.sq_norms[safe]
-        s = -(q_sq - 2.0 * rows @ qv + row_sq)
+        dot = rows.astype(qv.dtype) @ qv
+        if index.scales is not None:
+            dot = dot * index.scales[safe]
+        s = -(q_sq - 2.0 * dot + row_sq)
         s = jnp.where(valid, s, -jnp.inf)
         kk = min(k, s.shape[0])
         v, p = jax.lax.top_k(s, kk)
@@ -171,6 +205,53 @@ def search(index: IVFIndex, queries: Array, k: int, nprobe: int = 8,
     return jax.vmap(one_query)(queries, q2[:, 0], probe)
 
 
+@partial(jax.jit, static_argnames=("k", "nprobe", "use_pallas"))
+def search_rows(index: IVFIndex, queries: Array, k: int, payload_v: Array,
+                payload_f: Array, grouped_pv=None, grouped_pf=None,
+                nprobe: int = 8, *, use_pallas: bool = False):
+    """Gather-free probed search: returns the winners' PAYLOAD ROWS too.
+
+    payload_v (n, dv) / payload_f (n, m) are corpus-row-aligned (the re-rank
+    originals); grouped_pv (nlist, max_list, dv) / grouped_pf are the same
+    payloads in the grouped serving layout (built once by the engine via
+    ``build_grouped_payload``), which the rows-returning dedup kernel streams
+    through VMEM. Returns (scores (q,k), ids (q,k), rows_v (q,k,dv), rows_f
+    (q,k,m)) with (scores, ids) identical to ``search``; unfilled (-inf)
+    slots carry id 0 and corpus row 0's payload, matching the id-gather
+    convention exactly (the phantom candidate competes in the final top-k).
+    """
+    nprobe = min(nprobe, index.nlist)
+    if use_pallas:
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        c2 = jnp.sum(index.centroids * index.centroids, axis=-1)
+        _, probe = ops.score_topk_padded(index.centroids, c2, queries, nprobe)
+        uniq, member = ops.dedup_probes(probe.astype(jnp.int32), index.nlist)
+        vals, flat_ids, rows_v, rows_f = ops.ivf_score_topk_dedup_rows(
+            index.grouped, index.grouped_sq, index.valid, uniq, member,
+            queries, grouped_pv, grouped_pf, k,
+            scales=index.grouped_scales)
+        cand = index.lists.reshape(-1)[flat_ids]
+        vals = vals - q2
+        dead = jnp.isneginf(vals)
+        idx = jnp.where(dead, 0, jnp.maximum(cand, 0))
+        rows_v = jnp.where(dead[..., None], payload_v[0], rows_v)
+        rows_f = jnp.where(dead[..., None], payload_f[0], rows_f)
+        return vals, idx, rows_v, rows_f
+
+    vals, idx = search(index, queries, k, nprobe=nprobe, use_pallas=False)
+    return vals, idx, payload_v[idx], payload_f[idx]
+
+
+def build_grouped_payload(payload: Array, lists: Array) -> Array:
+    """Materialise a corpus-row-aligned payload (n, x) in the grouped
+    (nlist, max_list, x) serving layout (zeros on -1 padded slots), so the
+    rows-returning dedup kernel can stream payload slabs with the same
+    scalar-prefetch indirection as the corpus slabs."""
+    safe = jnp.maximum(lists, 0)
+    rows = payload[safe]                     # (nlist, max_list, x)
+    return jnp.where((lists >= 0)[..., None], rows, 0.0)
+
+
 def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
     """Incremental insert (host-side rebuild of the padded lists).
 
@@ -181,8 +262,14 @@ def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
     """
     new_vectors = jnp.asarray(new_vectors, jnp.float32)
     labels = assign(new_vectors, index.centroids)
-    all_vecs = jnp.concatenate(
-        [index.vectors, new_vectors.astype(index.vectors.dtype)], axis=0)
+    if index.scales is not None:
+        new_codes, new_scales = quant.quantize_rows(new_vectors)
+        all_vecs = jnp.concatenate([index.vectors, new_codes], axis=0)
+        all_scales = jnp.concatenate([index.scales, new_scales], axis=0)
+    else:
+        all_vecs = jnp.concatenate(
+            [index.vectors, new_vectors.astype(index.vectors.dtype)], axis=0)
+        all_scales = None
     labels_np = np.asarray(labels)
     lists_np = np.asarray(index.lists)
     sizes_np = np.asarray(index.list_sizes).copy()
@@ -200,8 +287,13 @@ def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
         out[lbl, sizes_np[lbl]] = base + i
         sizes_np[lbl] += 1
     lists = jnp.asarray(out)
-    sq_norms = jnp.sum(all_vecs.astype(jnp.float32) ** 2, axis=-1)
+    if all_scales is not None:
+        sq_norms = quant.sq_norms_of(all_vecs, all_scales)
+    else:
+        sq_norms = jnp.sum(all_vecs.astype(jnp.float32) ** 2, axis=-1)
     grouped, grouped_sq, valid = _grouped_slabs(all_vecs, sq_norms, lists)
+    grouped_scales = (None if all_scales is None
+                      else _group_scales(all_scales, lists))
     return IVFIndex(
         vectors=all_vecs,
         sq_norms=sq_norms,
@@ -211,4 +303,6 @@ def add(index: IVFIndex, new_vectors: Array) -> IVFIndex:
         grouped=grouped,
         grouped_sq=grouped_sq,
         valid=valid,
+        scales=all_scales,
+        grouped_scales=grouped_scales,
     )

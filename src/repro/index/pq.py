@@ -70,6 +70,17 @@ class PQIndex:
         """SearchBackend protocol entry point."""
         return search(self, queries, k, use_pallas=use_pallas, **opts)
 
+    def slab(self):
+        """The serving-layout view of this index (see ``repro.index.slab``):
+        replicated LUT terms + row-shardable codes, what the mesh-sharding
+        layer consumes."""
+        from repro.index.slab import PQSlab
+
+        return PQSlab(codebooks=self.codebooks, codes=self.codes,
+                      coarse_centers=self.coarse_centers,
+                      coarse_ids=self.coarse_ids, cb_sq=self.cb_sq,
+                      coarse_dot=self.coarse_dot)
+
 
 def build(vectors: Array, m_subspaces: int = 8, ksub: int = 256,
           rng: Array | None = None, iters: int = 15,

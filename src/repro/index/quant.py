@@ -1,0 +1,69 @@
+"""Per-row symmetric int8 quantization for corpus slabs.
+
+The int8 rung of the storage-dtype ladder (``FCVIConfig.storage_dtype``):
+each corpus row is stored as int8 codes plus ONE fp32 scale, chosen so the
+row's max-magnitude element maps to +-127. Scoring kernels stream the int8
+codes (quarter the HBM traffic of fp32) and dequantize in VMEM after the
+load — the per-row scale multiplies the matmul OUTPUT column, so the
+accumulation stays fp32 and the scores are exact for the DEQUANTIZED rows:
+
+    2 <q, s * x8> = 2 s (q . x8)    (one extra VPU multiply per score)
+
+Squared norms are fp32 computed from the dequantized values, matching the
+bf16 rung's convention (scores exact w.r.t. the stored corpus), and the
+exact-refine / combined-score re-rank stages always run on fp32 rows, so the
+final top-k matches the fp32 reference (see ``docs/architecture.md``,
+"Quantization ladder").
+
+Edge cases handled here (and pinned by ``tests/test_quantization.py``):
+  * constant / all-zero rows: a zero value range would produce a 0 scale and
+    0/0 codes — the scale is clamped to 1.0 (codes are exactly 0 either way);
+  * saturating outlier rows: the scale is derived FROM the row max, so
+    ``|x / scale| <= 127`` by construction and the round never clips;
+  * empty slabs: shape-(0, d) inputs quantize to shape-(0,) scales.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# int8 symmetric range: scale maps the row's absolute max onto +-127
+QMAX = 127.0
+
+
+def quantize_rows(x: Array):
+    """Quantize rows of ``x`` (..., d) fp32 to (codes int8, scales fp32).
+
+    ``scales`` has shape ``x.shape[:-1]`` — one scale per row, broadcast over
+    the feature axis. Rows with zero value range (constant-zero rows, or the
+    all-zero padding rows of grouped slabs) get scale 1.0 so dequantization
+    stays finite; their codes are exactly zero.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scales = jnp.where(amax > 0.0, amax / QMAX, 1.0).astype(jnp.float32)
+    codes = jnp.round(x / scales[..., None]).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes: Array, scales: Array) -> Array:
+    """(codes (..., d) int8, scales (...,) fp32) -> fp32 rows.
+
+    This is the ONE dequantization formula shared by every consumer (jnp
+    reference scoring, the Pallas kernels' VMEM casts, exact refine and the
+    checkpoint restore path), so the rungs stay bit-identical to each other:
+    ``codes.astype(f32) * scale``.
+    """
+    return codes.astype(jnp.float32) * scales[..., None]
+
+
+def sq_norms_of(codes: Array, scales: Array) -> Array:
+    """fp32 squared norms of the dequantized rows (the slab's sq_norms)."""
+    return jnp.sum(dequantize_rows(codes, scales) ** 2, axis=-1)
+
+
+def is_quantized(dtype) -> bool:
+    """True for storage dtypes that carry per-row scales."""
+    return dtype is not None and jnp.dtype(dtype) == jnp.dtype(jnp.int8)

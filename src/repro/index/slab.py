@@ -6,6 +6,14 @@ serving data — the thing the query hot path actually streams:
   * ``FlatSlab``  — the (n, d) corpus matrix + squared norms (flat backend).
   * ``IVFSlab``   — the grouped (nlist, max_list, d) inverted-list layout +
     the coarse centroids (IVF backend).
+  * ``PQSlab``    — the (n, M) residual-PQ codes + coarse assignments, with
+    the tiny LUT terms (codebooks, coarse centers, precomputed cross terms)
+    kept replicated (PQ backend).
+
+Storage may be fp32, bf16 or int8 (``FCVIConfig.storage_dtype``); the int8
+rung additionally carries per-row dequantisation ``scales`` (flat) /
+``grouped_scales`` (IVF) which shard alongside the rows they scale. Pad and
+sentinel scale entries are 1.0 (a harmless no-op multiplier).
 
 ``build_grouped`` materialises the IVF grouped layout from the compact id
 lists (moved here from ``repro.index.ivf`` so the layout construction lives
@@ -105,11 +113,12 @@ def pad_dim0(x: Array, to: int, value) -> Array:
 class FlatSlab:
     """The flat serving layout: corpus matrix + precomputed squared norms."""
 
-    vectors: Array   # (n, d)
+    vectors: Array   # (n, d) fp32 / bf16 / int8 codes
     sq_norms: Array  # (n,)
+    scales: Optional[Array] = None  # (n,) fp32 per-row dequant (int8 storage)
 
     def tree_flatten(self):
-        return (self.vectors, self.sq_norms), None
+        return (self.vectors, self.sq_norms, self.scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -125,8 +134,9 @@ class FlatSlab:
         """Row-shard this slab over the mesh axes of the "corpus" rule.
 
         Args: ``mesh`` + an ``AxisRules`` whose "corpus" entry names the mesh
-        axes to shard dim 0 over; ``vectors`` may be fp32 or bf16 (the
-        engine's ``storage_dtype`` knob) — sq norms stay fp32 either way.
+        axes to shard dim 0 over; ``vectors`` may be fp32, bf16 or int8
+        codes (the engine's ``storage_dtype`` knob) — sq norms stay fp32
+        either way, and int8 storage row-shards its ``scales`` alongside.
 
         ``placement="contiguous"`` keeps corpus order (bit-compatible with the
         single-device scan); ``"cluster"`` permutes rows so psi-clusters land
@@ -190,10 +200,15 @@ class FlatSlab:
         vec = pad_dim0(self.vectors[row_ids], n + n_pad, 0)
         sq = pad_dim0(self.sq_norms[row_ids], n + n_pad, jnp.inf)
         ids = pad_dim0(row_ids, n + n_pad, -1)
+        scales = None
+        if self.scales is not None:
+            scales = _put(mesh, axes,
+                          pad_dim0(self.scales[row_ids], n + n_pad, 1.0))
         return ShardedFlatSlab(
             vectors=_put(mesh, axes, vec),
             sq_norms=_put(mesh, axes, sq),
             row_ids=_put(mesh, axes, ids),
+            scales=scales,
             mesh=mesh, axes=axes, n_real=n,
             n_local=(n + n_pad) // ns, placement=placement,
             router_centers=router_centers, router_radii=router_radii,
@@ -222,6 +237,7 @@ class ShardedFlatSlab:
     router_centers: Optional[Array] = None   # (ncl, d) fp32 psi-cluster centers
     router_radii: Optional[Array] = None     # (ncl,) fp32 max member distance
     cluster_to_shard: Optional[Array] = None  # (ncl, ns) 0/1 incidence
+    scales: Optional[Array] = None  # (n_pad,) sharded fp32; 1.0 pad rows
 
     @property
     def n_shards(self) -> int:
@@ -239,13 +255,14 @@ class IVFSlab:
 
     centroids: Array   # (nlist, d)
     lists: Array       # (nlist, max_list) int32 corpus ids, -1 pad
-    grouped: Array     # (nlist, max_list, d)
+    grouped: Array     # (nlist, max_list, d) fp32 / bf16 / int8 codes
     grouped_sq: Array  # (nlist, max_list)
     valid: Array       # (nlist, max_list) float 0/1
+    grouped_scales: Optional[Array] = None  # (nlist, max_list) int8 dequant
 
     def tree_flatten(self):
         return (self.centroids, self.lists, self.grouped, self.grouped_sq,
-                self.valid), None
+                self.valid, self.grouped_scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -265,8 +282,9 @@ class IVFSlab:
 
         Args: ``mesh`` + an ``AxisRules`` whose "ivf_lists" entry names the
         mesh axes; ``list_sizes`` ((nlist,) int) skips recounting ``valid``.
-        The grouped slabs keep their storage dtype (fp32 or bf16); centroid
-        state stays replicated fp32.
+        The grouped slabs keep their storage dtype (fp32, bf16 or int8 codes
+        with ``grouped_scales`` sharded alongside); centroid state stays
+        replicated fp32.
 
         Whole inverted lists (= psi-clusters of the transformed corpus) are
         packed onto shards; ``placement="balanced"`` greedily packs largest
@@ -323,6 +341,11 @@ class IVFSlab:
         grouped_sq = grouped_sq.at[slots].set(self.grouped_sq)
         valid = valid.at[slots].set(self.valid)
         lists = lists.at[slots].set(self.lists)
+        grouped_scales = None
+        if self.grouped_scales is not None:
+            gs = jnp.ones((ns * lpp, max_list), jnp.float32)
+            grouped_scales = _put(mesh, axes,
+                                  gs.at[slots].set(self.grouped_scales))
         return ShardedIVFSlab(
             centroids=self.centroids,
             c_sq=jnp.sum(self.centroids.astype(jnp.float32) ** 2, axis=-1),
@@ -333,6 +356,7 @@ class IVFSlab:
             lists=_put(mesh, axes, lists),
             mesh=mesh, axes=axes, nlist=nlist, max_list=max_list,
             lists_per_shard=lp, placement=placement,
+            grouped_scales=grouped_scales,
         )
 
 
@@ -353,6 +377,7 @@ class ShardedIVFSlab:
     max_list: int
     lists_per_shard: int  # real slots per shard (local block adds 1 sentinel)
     placement: str
+    grouped_scales: Optional[Array] = None  # sharded; 1.0 on sentinels/pads
 
     @property
     def n_shards(self) -> int:
@@ -364,6 +389,93 @@ class ShardedIVFSlab:
         wholly owned by one shard, so this routing table is exact (the IVF
         analogue of the flat slab's ``cluster_to_shard`` incidence)."""
         return self.slot_of_list // (self.lists_per_shard + 1)
+
+
+# ---------------------------------------------------------------------------
+# PQ slab
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PQSlab:
+    """The residual-PQ serving layout: row-shardable codes + replicated LUTs.
+
+    The ADC scan only ever reads ``codes``/``coarse_ids`` per corpus row —
+    everything else (codebooks, coarse centers, the precomputed ``cb_sq`` /
+    ``coarse_dot`` cross terms) is LUT state a few KB large, consumed whole
+    by ``repro.index.pq.compute_luts``. Sharding therefore ROW-splits only
+    the per-row arrays and replicates the LUT terms.
+    """
+
+    codebooks: Array       # (M, ksub, dsub) replicated
+    codes: Array           # (n, M) uint8/int32 — row-shardable
+    coarse_centers: Array  # (ncoarse, d) replicated
+    coarse_ids: Array      # (n,) int32 — row-shardable
+    cb_sq: Array           # (M, ksub) replicated
+    coarse_dot: Array      # (ncoarse, M, ksub) replicated
+
+    def tree_flatten(self):
+        return (self.codebooks, self.codes, self.coarse_centers,
+                self.coarse_ids, self.cb_sq, self.coarse_dot), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.codes.shape[0]
+
+    def shard(self, mesh: Mesh, rules, *,
+              placement: str = "contiguous") -> "ShardedPQSlab":
+        """Row-shard the codes over the "corpus" rule axes (contiguous only:
+        PQ has no per-row geometry to cluster by — the coarse quantizer
+        already IS the cluster structure, and it rides along replicated).
+        Pad rows get code 0 / coarse id 0 and are masked by position
+        (``row >= n_real``) in the sharded serving step."""
+        if placement != "contiguous":
+            raise ValueError(
+                f"PQ slab only supports contiguous placement, got "
+                f"{placement!r}")
+        axes = resolve_axes(mesh, rules, "corpus")
+        ns = axes_size(mesh, axes)
+        n = self.size
+        n_pad = -n % ns
+        return ShardedPQSlab(
+            codebooks=self.codebooks,
+            codes=_put(mesh, axes, pad_dim0(self.codes, n + n_pad, 0)),
+            coarse_centers=self.coarse_centers,
+            coarse_ids=_put(mesh, axes,
+                            pad_dim0(self.coarse_ids, n + n_pad, 0)),
+            cb_sq=self.cb_sq,
+            coarse_dot=self.coarse_dot,
+            mesh=mesh, axes=axes, n_real=n,
+            n_local=(n + n_pad) // ns, placement=placement,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPQSlab:
+    """Row-sharded PQ slab (host-side container, not a pytree).
+
+    Rows stay in corpus order (contiguous placement), so a slab row's corpus
+    id is just its global position — no ``row_ids`` indirection needed."""
+
+    codebooks: Array       # replicated
+    codes: Array           # (n_pad, M) sharded P(axes); zero pad rows
+    coarse_centers: Array  # replicated
+    coarse_ids: Array      # (n_pad,) sharded; zero pad rows
+    cb_sq: Array           # replicated
+    coarse_dot: Array      # replicated
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    n_real: int
+    n_local: int           # rows per shard
+    placement: str
+
+    @property
+    def n_shards(self) -> int:
+        return axes_size(self.mesh, self.axes)
 
 
 def balanced_list_layout(list_sizes: np.ndarray, n_shards: int,

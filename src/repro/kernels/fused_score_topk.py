@@ -23,11 +23,16 @@ DEF_BLOCK_Q = 64
 NEG_INF = float("-inf")
 
 
-def _select_topk(vals, ids, k: int):
-    """Unrolled first-occurrence top-k over the last axis. vals: (q, c)."""
+def _select_topk_pos(vals, ids, k: int):
+    """Unrolled first-occurrence top-k over the last axis, ALSO returning the
+    winners' positions along that axis. vals: (q, c) -> ((q, k),)*3.
+
+    The positions are what the rows-returning kernels key their VMEM row
+    copy-through on (position < k = keep the running row, >= k = take row
+    ``pos - k`` of the streamed block)."""
     c = vals.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
-    out_v, out_i = [], []
+    out_v, out_i, out_p = [], [], []
     cur = vals
     for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)
@@ -35,8 +40,40 @@ def _select_topk(vals, ids, k: int):
         sel = iota == pos
         out_v.append(m[:, 0])
         out_i.append(jnp.sum(jnp.where(sel, ids, 0), axis=-1))
+        out_p.append(pos[:, 0])
         cur = jnp.where(sel, NEG_INF, cur)
-    return jnp.stack(out_v, axis=-1), jnp.stack(out_i, axis=-1)
+    return (jnp.stack(out_v, axis=-1), jnp.stack(out_i, axis=-1),
+            jnp.stack(out_p, axis=-1))
+
+
+def _select_topk(vals, ids, k: int):
+    """Unrolled first-occurrence top-k over the last axis. vals: (q, c)."""
+    out_v, out_i, _ = _select_topk_pos(vals, ids, k)
+    return out_v, out_i
+
+
+def pick_rows(pos, run_rows, block_rows, k: int):
+    """Copy winner rows through VMEM by top-k position (no HBM gather).
+
+    pos: (q, k) positions into the concatenated [running-k | block] axis;
+    run_rows: (q, k, d) rows carried so far; block_rows: (bn, d) this grid
+    step's payload block. The selection is two one-hot matmuls (exact: each
+    output row sums one ``1.0 * x`` with zeros), so it lowers to MXU dots
+    instead of a gather.
+    """
+    q, kk = pos.shape
+    bn = block_rows.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (q, kk, k), 2)
+    sel_run = (iota_k == pos[:, :, None]).astype(jnp.float32)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (q, kk, bn), 2)
+    sel_blk = (iota_b == (pos[:, :, None] - k)).astype(jnp.float32)
+    kept = jax.lax.dot_general(
+        sel_run, run_rows, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    taken = jax.lax.dot_general(
+        sel_blk, block_rows.astype(jnp.float32), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return kept + taken
 
 
 def _kernel(x_ref, xsq_ref, q_ref, qsq_ref, vals_ref, idx_ref, *, k: int,
@@ -63,17 +100,32 @@ def _kernel(x_ref, xsq_ref, q_ref, qsq_ref, vals_ref, idx_ref, *, k: int,
     idx_ref[...] = new_i
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "block_rows", "block_q", "interpret"))
-def score_topk(corpus, sq_norms, queries, k: int, *,
-               block_rows: int = DEF_BLOCK_ROWS, block_q: int = DEF_BLOCK_Q,
-               interpret: bool = True):
-    """corpus: (n, d); sq_norms: (n,); queries: (q, d).
+def _scaled_kernel(x_ref, xsq_ref, scale_ref, q_ref, qsq_ref, vals_ref,
+                   idx_ref, *, k: int, block_rows: int):
+    """Int8 variant: rows stream as int8 codes, the per-row scale multiplies
+    the matmul OUTPUT column — fp32 accumulation, one extra VPU multiply."""
+    j = pl.program_id(1)
 
-    Returns (scores (q, k), ids (q, k)) — negative squared L2, descending.
-    """
-    n, d = corpus.shape
-    nq = queries.shape[0]
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    q = q_ref[...]                      # (bq, d)
+    scores = 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    scores = scores * scale_ref[...][None, :]
+    scores = scores - xsq_ref[...][None, :] - qsq_ref[...][:, None]
+    gids = j * block_rows + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
+def _check_tiling(n, nq, k, block_rows, block_q):
     block_rows = min(block_rows, n)
     block_q = min(block_q, nq)
     if n % block_rows or nq % block_q:
@@ -81,27 +133,143 @@ def score_topk(corpus, sq_norms, queries, k: int, *,
             f"shapes must tile: n={n} %% {block_rows}, q={nq} %% {block_q}")
     if k > n:
         raise ValueError(f"k={k} > corpus size {n}")
+    return block_rows, block_q
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_rows", "block_q", "interpret"))
+def score_topk(corpus, sq_norms, queries, k: int, *, scales=None,
+               block_rows: int = DEF_BLOCK_ROWS, block_q: int = DEF_BLOCK_Q,
+               interpret: bool = True):
+    """corpus: (n, d); sq_norms: (n,); queries: (q, d).
+
+    Returns (scores (q, k), ids (q, k)) — negative squared L2, descending.
+    ``scales`` (n,) routes to the int8 kernel variant (per-row dequant of the
+    matmul output; scores are exact for the dequantized rows).
+    """
+    n, d = corpus.shape
+    nq = queries.shape[0]
+    block_rows, block_q = _check_tiling(n, nq, k, block_rows, block_q)
     grid = (nq // block_q, n // block_rows)
     qsq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
 
-    kernel = functools.partial(_kernel, k=k, block_rows=block_rows)
-    vals, idx = pl.pallas_call(
+    row_spec = pl.BlockSpec((block_rows, d), lambda i, j: (j, 0))
+    rsq_spec = pl.BlockSpec((block_rows,), lambda i, j: (j,))
+    q_spec = pl.BlockSpec((block_q, d), lambda i, j: (i, 0))
+    qsq_spec = pl.BlockSpec((block_q,), lambda i, j: (i,))
+    out_specs = (
+        pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((nq, k), jnp.float32),
+        jax.ShapeDtypeStruct((nq, k), jnp.int32),
+    )
+    if scales is None:
+        kernel = functools.partial(_kernel, k=k, block_rows=block_rows)
+        vals, idx = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[row_spec, rsq_spec, q_spec, qsq_spec],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(corpus, sq_norms, queries, qsq)
+    else:
+        kernel = functools.partial(_scaled_kernel, k=k, block_rows=block_rows)
+        vals, idx = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[row_spec, rsq_spec, rsq_spec, q_spec, qsq_spec],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(corpus, sq_norms, scales, queries, qsq)
+    return vals, idx
+
+
+def _rows_kernel(x_ref, xsq_ref, scale_ref, pv_ref, pf_ref, q_ref, qsq_ref,
+                 vals_ref, idx_ref, sr_ref, rv_ref, rf_ref, *, k: int,
+                 block_rows: int):
+    """Rows-returning variant: alongside (vals, ids) the kernel carries the
+    winners' DEQUANTIZED scan rows plus their payload rows (re-rank vectors
+    and filter values) in the output refs, so the caller never gathers from
+    HBM. The per-row scale operand is all-ones for fp32/bf16 storage
+    (multiplying by 1.0 is exact, so (vals, ids) match the plain kernel
+    bitwise)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        sr_ref[...] = jnp.zeros_like(sr_ref)
+        rv_ref[...] = jnp.zeros_like(rv_ref)
+        rf_ref[...] = jnp.zeros_like(rf_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    scale = scale_ref[...]              # (bn,)
+    q = q_ref[...]                      # (bq, d)
+    scores = 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    scores = scores * scale[None, :]
+    scores = scores - xsq_ref[...][None, :] - qsq_ref[...][:, None]
+    gids = j * block_rows + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    run_sr = sr_ref[...]
+    run_rv = rv_ref[...]
+    run_rf = rf_ref[...]
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i, pos = _select_topk_pos(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+    sr_ref[...] = pick_rows(pos, run_sr, x * scale[:, None], k)
+    rv_ref[...] = pick_rows(pos, run_rv, pv_ref[...], k)
+    rf_ref[...] = pick_rows(pos, run_rf, pf_ref[...], k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_rows", "block_q", "interpret"))
+def score_topk_rows(corpus, sq_norms, payload_v, payload_f, queries, k: int,
+                    *, scales=None, block_rows: int = DEF_BLOCK_ROWS,
+                    block_q: int = DEF_BLOCK_Q, interpret: bool = True):
+    """Gather-free flat scan: corpus (n, d); payload_v (n, dv); payload_f
+    (n, m); queries (q, d).
+
+    Returns (scores (q, k), ids (q, k), scan_rows (q, k, d) fp32 dequantized
+    stored rows for the exact-refine pass, rows_v (q, k, dv), rows_f
+    (q, k, m)) — (scores, ids) bit-identical to ``score_topk``.
+    """
+    n, d = corpus.shape
+    nq = queries.shape[0]
+    dv = payload_v.shape[-1]
+    m = payload_f.shape[-1]
+    block_rows, block_q = _check_tiling(n, nq, k, block_rows, block_q)
+    grid = (nq // block_q, n // block_rows)
+    qsq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    if scales is None:
+        scales = jnp.ones((n,), jnp.float32)
+
+    kernel = functools.partial(_rows_kernel, k=k, block_rows=block_rows)
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i, j: (j, 0)),
             pl.BlockSpec((block_rows,), lambda i, j: (j,)),
+            pl.BlockSpec((block_rows,), lambda i, j: (j,)),
+            pl.BlockSpec((block_rows, dv), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_rows, m), lambda i, j: (j, 0)),
             pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
             pl.BlockSpec((block_q,), lambda i, j: (i,)),
         ],
         out_specs=(
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_q, k, dv), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_q, k, m), lambda i, j: (i, 0, 0)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((nq, k), jnp.float32),
             jax.ShapeDtypeStruct((nq, k), jnp.int32),
+            jax.ShapeDtypeStruct((nq, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k, dv), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k, m), jnp.float32),
         ),
         interpret=interpret,
-    )(corpus, sq_norms, queries, qsq)
-    return vals, idx
+    )(corpus, sq_norms, scales, payload_v, payload_f, queries, qsq)

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fused_score_topk import _select_topk, NEG_INF
+from repro.kernels.fused_score_topk import (_select_topk, _select_topk_pos,
+                                            pick_rows, NEG_INF)
 
 
 def _batch_kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref,
@@ -60,9 +61,38 @@ def _batch_kernel(probes_ref, slab_ref, sq_ref, valid_ref, q_ref, vals_ref,
     idx_ref[...] = new_i
 
 
+def _batch_scaled_kernel(probes_ref, slab_ref, sq_ref, sc_ref, valid_ref,
+                         q_ref, vals_ref, idx_ref, *, k: int, max_list: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    slab = slab_ref[...][0].astype(jnp.float32)   # (max_list, d) int8 codes
+    sq = sq_ref[...][0]                # (max_list,)
+    sc = sc_ref[...][0]                # (max_list,) per-row dequant scales
+    ok = valid_ref[...][0]             # (max_list,) float 0/1
+    q = q_ref[...][0]                  # (d,)
+
+    s = 2.0 * jnp.dot(slab, q, preferred_element_type=jnp.float32) * sc - sq
+    s = jnp.where(ok > 0.5, s, NEG_INF)[None, :]        # (1, max_list)
+    list_id = probes_ref[i, j]
+    gids = (list_id * max_list
+            + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+
+    cat_v = jnp.concatenate([vals_ref[...], s], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k: int,
-                         *, interpret: bool = True):
+                         *, scales=None, interpret: bool = True):
     """Multi-query probed search over the grouped slab layout.
 
     grouped: (nlist, max_list, d); grouped_sq: (nlist, max_list);
@@ -70,34 +100,46 @@ def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k: int,
     queries: (b, d). Returns (vals (b, k), flat_ids (b, k)) with flat ids
     into grouped.reshape(-1, d). Scores are 2<x,q> - ||x||^2 (monotone in
     negative squared distance — the ||q||^2 constant is dropped).
+    ``scales`` (nlist, max_list) routes to the int8 variant (per-row dequant
+    of the dot output, fp32 accumulation).
     """
     nlist, max_list, d = grouped.shape
     b, nprobe = probes.shape
-    kernel = functools.partial(_batch_kernel, k=k, max_list=max_list)
 
+    probe_slab = pl.BlockSpec((1, max_list, d),
+                              lambda i, j, probes: (probes[i, j], 0, 0))
+    probe_row = pl.BlockSpec((1, max_list),
+                             lambda i, j, probes: (probes[i, j], 0))
+    q_spec = pl.BlockSpec((1, d), lambda i, j, probes: (i, 0))
+    out_specs = (
+        pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
+        pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+    )
+    if scales is None:
+        kernel = functools.partial(_batch_kernel, k=k, max_list=max_list)
+        in_specs = [probe_slab, probe_row, probe_row, q_spec]
+        args = (probes, grouped, grouped_sq, valid, queries)
+    else:
+        kernel = functools.partial(_batch_scaled_kernel, k=k,
+                                   max_list=max_list)
+        in_specs = [probe_slab, probe_row, probe_row, probe_row, q_spec]
+        args = (probes, grouped, grouped_sq, scales, valid, queries)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, nprobe),
-        in_specs=[
-            pl.BlockSpec((1, max_list, d), lambda i, j, probes: (probes[i, j], 0, 0)),
-            pl.BlockSpec((1, max_list), lambda i, j, probes: (probes[i, j], 0)),
-            pl.BlockSpec((1, max_list), lambda i, j, probes: (probes[i, j], 0)),
-            pl.BlockSpec((1, d), lambda i, j, probes: (i, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, j, probes: (i, 0)),
-        ),
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
     vals, idx = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=(
-            jax.ShapeDtypeStruct((b, k), jnp.float32),
-            jax.ShapeDtypeStruct((b, k), jnp.int32),
-        ),
+        out_shape=out_shape,
         interpret=interpret,
-    )(probes, grouped, grouped_sq, valid, queries)
+    )(*args)
     return vals, idx
 
 
@@ -131,9 +173,41 @@ def _dedup_kernel(uniq_ref, slab_ref, sq_ref, valid_ref, member_ref, q_ref,
     idx_ref[...] = new_i
 
 
+def _dedup_scaled_kernel(uniq_ref, slab_ref, sq_ref, sc_ref, valid_ref,
+                         member_ref, q_ref, vals_ref, idx_ref, *, k: int,
+                         max_list: int):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    slab = slab_ref[...][0].astype(jnp.float32)   # (max_list, d) int8 codes
+    sq = sq_ref[...][0]                # (max_list,)
+    sc = sc_ref[...][0]                # (max_list,) per-row dequant scales
+    ok = valid_ref[...][0]             # (max_list,) float 0/1
+    mem = member_ref[...][0]           # (b,) float 0/1
+    q = q_ref[...]                     # (b, d)
+
+    scores = 2.0 * jnp.dot(q, slab.T, preferred_element_type=jnp.float32)
+    scores = scores * sc[None, :] - sq[None, :]         # (b, max_list)
+    keep = (ok > 0.5)[None, :] & (mem > 0.5)[:, None]
+    scores = jnp.where(keep, scores, NEG_INF)
+    list_id = uniq_ref[s]
+    gids = (list_id * max_list
+            + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
-                         k: int, *, interpret: bool = True):
+                         k: int, *, scales=None, interpret: bool = True):
     """Probe-major batched slab search over the deduplicated probed lists.
 
     grouped: (nlist, max_list, d); grouped_sq/valid: (nlist, max_list);
@@ -145,11 +219,112 @@ def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
     ``ivf_score_topk_batch``: scores 2<x,q> - ||x||^2, flat ids into
     grouped.reshape(-1, d). Each unique slab is DMA'd once for the whole
     batch (grid is sequential over slots, queries stay VMEM-resident).
+    ``scales`` (nlist, max_list) routes to the int8 variant.
     """
     nlist, max_list, d = grouped.shape
     b = queries.shape[0]
     slots = uniq.shape[0]
-    kernel = functools.partial(_dedup_kernel, k=k, max_list=max_list)
+
+    slab_spec = pl.BlockSpec((1, max_list, d), lambda s, uniq: (uniq[s], 0, 0))
+    row_spec = pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0))
+    mem_spec = pl.BlockSpec((1, b), lambda s, uniq: (s, 0))
+    q_spec = pl.BlockSpec((b, d), lambda s, uniq: (0, 0))
+    out_specs = (
+        pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
+        pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+    )
+    if scales is None:
+        kernel = functools.partial(_dedup_kernel, k=k, max_list=max_list)
+        in_specs = [slab_spec, row_spec, row_spec, mem_spec, q_spec]
+        args = (uniq, grouped, grouped_sq, valid, member, queries)
+    else:
+        kernel = functools.partial(_dedup_scaled_kernel, k=k,
+                                   max_list=max_list)
+        in_specs = [slab_spec, row_spec, row_spec, row_spec, mem_spec, q_spec]
+        args = (uniq, grouped, grouped_sq, scales, valid, member, queries)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(slots,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    return vals, idx
+
+
+def _dedup_rows_kernel(uniq_ref, slab_ref, sq_ref, sc_ref, valid_ref,
+                       member_ref, pv_ref, pf_ref, q_ref, vals_ref, idx_ref,
+                       rv_ref, rf_ref, *, k: int, max_list: int):
+    """Rows-returning dedup variant: payload slabs (re-rank vectors and
+    filter values, grouped by list like the corpus slab) ride the same
+    scalar-prefetch indirection, and the winners' payload rows are carried
+    in the output refs via the one-hot copy-through — no HBM gather after
+    the kernel. The scale operand is all-ones for fp32/bf16 storage, so
+    (vals, ids) stay bit-identical to ``ivf_score_topk_dedup``."""
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        rv_ref[...] = jnp.zeros_like(rv_ref)
+        rf_ref[...] = jnp.zeros_like(rf_ref)
+
+    slab = slab_ref[...][0].astype(jnp.float32)   # (max_list, d)
+    sq = sq_ref[...][0]
+    sc = sc_ref[...][0]
+    ok = valid_ref[...][0]
+    mem = member_ref[...][0]
+    q = q_ref[...]                                # (b, d)
+
+    scores = 2.0 * jnp.dot(q, slab.T, preferred_element_type=jnp.float32)
+    scores = scores * sc[None, :] - sq[None, :]
+    keep = (ok > 0.5)[None, :] & (mem > 0.5)[:, None]
+    scores = jnp.where(keep, scores, NEG_INF)
+    list_id = uniq_ref[s]
+    gids = (list_id * max_list
+            + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+
+    run_rv = rv_ref[...]
+    run_rf = rf_ref[...]
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i, pos = _select_topk_pos(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+    rv_ref[...] = pick_rows(pos, run_rv, pv_ref[...][0], k)
+    rf_ref[...] = pick_rows(pos, run_rf, pf_ref[...][0], k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_score_topk_dedup_rows(grouped, grouped_sq, valid, uniq, member,
+                              queries, payload_v, payload_f, k: int, *,
+                              scales=None, interpret: bool = True):
+    """Gather-free dedup search: like ``ivf_score_topk_dedup`` but ALSO
+    returns the winners' payload rows straight from VMEM.
+
+    payload_v: (nlist, max_list, dv); payload_f: (nlist, max_list, m) —
+    grouped row-aligned with the corpus slab. Returns (vals (b, k),
+    flat_ids (b, k), rows_v (b, k, dv), rows_f (b, k, m)); unfilled (-inf)
+    slots carry zero rows (the caller substitutes its phantom-row payload).
+    """
+    nlist, max_list, d = grouped.shape
+    b = queries.shape[0]
+    slots = uniq.shape[0]
+    dv = payload_v.shape[-1]
+    m = payload_f.shape[-1]
+    if scales is None:
+        scales = jnp.ones((nlist, max_list), jnp.float32)
+    kernel = functools.partial(_dedup_rows_kernel, k=k, max_list=max_list)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -158,24 +333,31 @@ def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
             pl.BlockSpec((1, max_list, d), lambda s, uniq: (uniq[s], 0, 0)),
             pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0)),
             pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0)),
+            pl.BlockSpec((1, max_list), lambda s, uniq: (uniq[s], 0)),
             pl.BlockSpec((1, b), lambda s, uniq: (s, 0)),
+            pl.BlockSpec((1, max_list, dv), lambda s, uniq: (uniq[s], 0, 0)),
+            pl.BlockSpec((1, max_list, m), lambda s, uniq: (uniq[s], 0, 0)),
             pl.BlockSpec((b, d), lambda s, uniq: (0, 0)),
         ],
         out_specs=(
             pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
             pl.BlockSpec((b, k), lambda s, uniq: (0, 0)),
+            pl.BlockSpec((b, k, dv), lambda s, uniq: (0, 0, 0)),
+            pl.BlockSpec((b, k, m), lambda s, uniq: (0, 0, 0)),
         ),
     )
-    vals, idx = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=(
             jax.ShapeDtypeStruct((b, k), jnp.float32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, m), jnp.float32),
         ),
         interpret=interpret,
-    )(uniq, grouped, grouped_sq, valid, member, queries)
-    return vals, idx
+    )(uniq, grouped, grouped_sq, scales, valid, member, payload_v,
+      payload_f, queries)
 
 
 def dedup_probes(probes, nlist: int):
@@ -201,12 +383,12 @@ def dedup_probes(probes, nlist: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k: int, *,
-                   interpret: bool = True):
+                   scales=None, interpret: bool = True):
     """Single-query probed search (batch size 1 of the batched kernel).
 
     probes: (nprobe,) int32; query: (d,). Returns (vals (k,), flat_ids (k,)).
     """
     vals, idx = ivf_score_topk_batch(
         grouped, grouped_sq, valid, probes[None, :], query[None, :], k,
-        interpret=interpret)
+        scales=scales, interpret=interpret)
     return vals[0], idx[0]

@@ -31,12 +31,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fcvi_transform import fused_transform as _fused_transform
-from repro.kernels.fused_score_topk import score_topk as _score_topk
+from repro.kernels.fused_score_topk import (score_topk as _score_topk,
+                                            score_topk_rows as _score_topk_rows)
 from repro.kernels.rescore import rescore as _rescore
 from repro.kernels.ivf_score import (dedup_probes,
                                      ivf_score_topk as _ivf_score_topk,
                                      ivf_score_topk_batch as _ivf_score_topk_batch,
-                                     ivf_score_topk_dedup as _ivf_score_topk_dedup)
+                                     ivf_score_topk_dedup as _ivf_score_topk_dedup,
+                                     ivf_score_topk_dedup_rows as _ivf_score_topk_dedup_rows)
 from repro.kernels.pq_lut import (pq_lut_qdot as _pq_lut_qdot,
                                   pq_score as _pq_score,
                                   pq_score_batch as _pq_score_batch)
@@ -66,27 +68,21 @@ def fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
     return out[:n]
 
 
-def score_topk(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
-               block_rows: int = 128, block_q: int = 64):
+def score_topk(corpus, sq_norms, queries, k, *, scales=None,
+               use_pallas: bool = True, block_rows: int = 128,
+               block_q: int = 64):
     if not use_pallas:
-        return ref.ref_score_topk(corpus, sq_norms, queries, k)
-    return _score_topk(corpus, sq_norms, queries, k, block_rows=block_rows,
-                       block_q=block_q, interpret=_interpret())
+        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales)
+    return _score_topk(corpus, sq_norms, queries, k, scales=scales,
+                       block_rows=block_rows, block_q=block_q,
+                       interpret=_interpret())
 
 
-def score_topk_padded(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
-                      block_rows: int = 128, block_q: int = 64):
-    """``score_topk`` for arbitrary shapes: zero-pads corpus rows (with +inf
-    squared norms, so pad rows score -inf and never surface) and queries to
-    the kernel's tile multiples, then slices the padding back off. This is
-    the dispatch used by flat candidate generation AND the IVF coarse
-    quantizer (centroid scoring is just a small score_topk)."""
-    if not use_pallas:
-        return ref.ref_score_topk(corpus, sq_norms, queries, k)
+def _pad_corpus(corpus, sq_norms, scales, queries, br, bq):
+    """Zero-pad corpus rows (+inf squared norms, unit scales) and queries to
+    tile multiples; pad rows score -inf and never surface."""
     n, d = corpus.shape
     nq = queries.shape[0]
-    br = min(block_rows, n)
-    bq = min(block_q, nq)
     n_pad = -n % br
     q_pad = -nq % bq
     if n_pad:
@@ -94,16 +90,75 @@ def score_topk_padded(corpus, sq_norms, queries, k, *, use_pallas: bool = True,
             [corpus, jnp.zeros((n_pad, d), corpus.dtype)], axis=0)
         sq_norms = jnp.concatenate(
             [sq_norms, jnp.full((n_pad,), jnp.inf, sq_norms.dtype)])
+        if scales is not None:
+            scales = jnp.concatenate(
+                [scales, jnp.ones((n_pad,), scales.dtype)])
     if q_pad:
         queries = jnp.concatenate(
             [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0)
-    vals, idx = _score_topk(corpus, sq_norms, queries, k, block_rows=br,
-                            block_q=bq, interpret=_interpret())
+    return corpus, sq_norms, scales, queries
+
+
+def score_topk_padded(corpus, sq_norms, queries, k, *, scales=None,
+                      use_pallas: bool = True, block_rows: int = 128,
+                      block_q: int = 64):
+    """``score_topk`` for arbitrary shapes: zero-pads corpus rows (with +inf
+    squared norms, so pad rows score -inf and never surface) and queries to
+    the kernel's tile multiples, then slices the padding back off. This is
+    the dispatch used by flat candidate generation AND the IVF coarse
+    quantizer (centroid scoring is just a small score_topk)."""
+    if not use_pallas:
+        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales)
+    n = corpus.shape[0]
+    nq = queries.shape[0]
+    br = min(block_rows, n)
+    bq = min(block_q, nq)
+    corpus, sq_norms, scales, queries = _pad_corpus(
+        corpus, sq_norms, scales, queries, br, bq)
+    vals, idx = _score_topk(corpus, sq_norms, queries, k, scales=scales,
+                            block_rows=br, block_q=bq, interpret=_interpret())
     return vals[:nq], idx[:nq]
+
+
+def score_topk_rows_padded(corpus, sq_norms, payload_v, payload_f, queries,
+                           k, *, scales=None, use_pallas: bool = True,
+                           block_rows: int = 128, block_q: int = 64):
+    """Gather-free ``score_topk`` for arbitrary shapes: also returns the
+    winners' dequantized scan rows and payload rows straight from the
+    kernel's VMEM (see ``fused_score_topk.score_topk_rows``). Padding as in
+    ``score_topk_padded``; payload pad rows are zero."""
+    if not use_pallas:
+        return ref.ref_score_topk_rows(corpus, sq_norms, payload_v, payload_f,
+                                       queries, k, scales=scales)
+    n = corpus.shape[0]
+    nq = queries.shape[0]
+    br = min(block_rows, n)
+    bq = min(block_q, nq)
+    n_pad = -n % br
+    if n_pad:
+        payload_v = jnp.concatenate(
+            [payload_v, jnp.zeros((n_pad, payload_v.shape[1]),
+                                  payload_v.dtype)], axis=0)
+        payload_f = jnp.concatenate(
+            [payload_f, jnp.zeros((n_pad, payload_f.shape[1]),
+                                  payload_f.dtype)], axis=0)
+    corpus, sq_norms, scales, queries = _pad_corpus(
+        corpus, sq_norms, scales, queries, br, bq)
+    vals, idx, srows, rv, rf = _score_topk_rows(
+        corpus, sq_norms, payload_v, payload_f, queries, k, scales=scales,
+        block_rows=br, block_q=bq, interpret=_interpret())
+    return vals[:nq], idx[:nq], srows[:nq], rv[:nq], rf[:nq]
 
 
 def rescore(cand_v, cand_f, qn, fqn, lam, *, use_pallas: bool = True,
             block_b: int = 8):
+    """Candidates may arrive bf16 / int8-dequantized: both paths cast to
+    fp32 up front so the cosine norms and dots accumulate at full precision
+    (a no-op for fp32 inputs)."""
+    cand_v = cand_v.astype(jnp.float32)
+    cand_f = cand_f.astype(jnp.float32)
+    qn = qn.astype(jnp.float32)
+    fqn = fqn.astype(jnp.float32)
     if not use_pallas:
         return ref.ref_rescore(cand_v, cand_f, qn, fqn, lam)
     return _rescore(cand_v, cand_f, qn, fqn, lam, block_b=block_b,
@@ -111,35 +166,52 @@ def rescore(cand_v, cand_f, qn, fqn, lam, *, use_pallas: bool = True,
 
 
 def ivf_score_topk(grouped, grouped_sq, valid, probes, query, k, *,
-                   use_pallas: bool = True):
+                   scales=None, use_pallas: bool = True):
     if not use_pallas:
         return ref.ref_ivf_score_topk(grouped, grouped_sq, valid > 0.5,
                                       probes, query, k)
     return _ivf_score_topk(grouped, grouped_sq, valid, probes, query, k,
-                           interpret=_interpret())
+                           scales=scales, interpret=_interpret())
 
 
 def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k, *,
-                         use_pallas: bool = True):
+                         scales=None, use_pallas: bool = True):
     """Batched probed-slab search: probes (b, nprobe), queries (b, d)."""
     if not use_pallas:
         return ref.ref_ivf_score_topk_batch(grouped, grouped_sq, valid > 0.5,
-                                            probes, queries, k)
+                                            probes, queries, k, scales=scales)
     return _ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries,
-                                 k, interpret=_interpret())
+                                 k, scales=scales, interpret=_interpret())
 
 
 def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries, k,
-                         *, use_pallas: bool = True):
+                         *, scales=None, use_pallas: bool = True):
     """Probe-major deduplicated batched slab search: uniq (s,), member (s, b),
     queries (b, d). Shared lists are DMA'd once per batch (see
     ``ivf_score.dedup_probes`` for building uniq/member from a probe matrix).
     """
     if not use_pallas:
         return ref.ref_ivf_score_topk_dedup(grouped, grouped_sq, valid > 0.5,
-                                            uniq, member > 0.5, queries, k)
+                                            uniq, member > 0.5, queries, k,
+                                            scales=scales)
     return _ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member,
-                                 queries, k, interpret=_interpret())
+                                 queries, k, scales=scales,
+                                 interpret=_interpret())
+
+
+def ivf_score_topk_dedup_rows(grouped, grouped_sq, valid, uniq, member,
+                              queries, payload_v, payload_f, k, *,
+                              scales=None, use_pallas: bool = True):
+    """Gather-free dedup search: also returns the winners' payload rows
+    (re-rank vectors + filter values, grouped row-aligned with the corpus
+    slab) straight from the kernel's VMEM. -inf slots carry zero rows."""
+    if not use_pallas:
+        return ref.ref_ivf_score_topk_dedup_rows(
+            grouped, grouped_sq, valid > 0.5, uniq, member > 0.5, queries,
+            payload_v, payload_f, k, scales=scales)
+    return _ivf_score_topk_dedup_rows(
+        grouped, grouped_sq, valid, uniq, member, queries, payload_v,
+        payload_f, k, scales=scales, interpret=_interpret())
 
 
 def pq_score(codes, lut, *, use_pallas: bool = True, block_rows: int = 512):

@@ -32,11 +32,34 @@ def ref_fused_transform(v: Array, f: Array, proj: Array, alpha,
     return vn - alpha * (fn @ proj)
 
 
-def ref_score_topk(corpus: Array, sq_norms: Array, queries: Array, k: int):
-    """Exact negative-squared-L2 top-k: the serving inner loop."""
+def ref_score_topk(corpus: Array, sq_norms: Array, queries: Array, k: int,
+                   scales=None):
+    """Exact negative-squared-L2 top-k: the serving inner loop.
+
+    ``scales`` (n,) is the int8 storage rung's per-row dequant scale; like
+    the kernel it multiplies the matmul OUTPUT column (fp32 accumulation).
+    """
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
-    scores = -(q2 - 2.0 * queries @ corpus.T + sq_norms[None, :])
+    dot = queries @ corpus.astype(queries.dtype).T
+    if scales is not None:
+        dot = dot * scales[None, :]
+    scores = -(q2 - 2.0 * dot + sq_norms[None, :])
     return jax.lax.top_k(scores, k)
+
+
+def ref_score_topk_rows(corpus: Array, sq_norms: Array, payload_v: Array,
+                        payload_f: Array, queries: Array, k: int,
+                        scales=None):
+    """Oracle for the rows-returning flat kernel: top-k ids plus the
+    winners' dequantized scan rows and payload rows (gathered by id — the
+    semantic definition of what the kernel carries through VMEM)."""
+    vals, ids = ref_score_topk(corpus, sq_norms, queries, k, scales=scales)
+    scan_rows = corpus[ids].astype(jnp.float32)
+    if scales is not None:
+        scan_rows = scan_rows * scales[ids][..., None]
+    return (vals, ids, scan_rows,
+            payload_v[ids].astype(jnp.float32),
+            payload_f[ids].astype(jnp.float32))
 
 
 def ref_rescore(cand_v: Array, cand_f: Array, qn: Array, fqn: Array, lam):
@@ -76,12 +99,14 @@ def ref_ivf_score_topk(grouped: Array, grouped_sq: Array, valid: Array,
 
 
 def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
-                             probes: Array, queries: Array, k: int):
+                             probes: Array, queries: Array, k: int,
+                             scales=None):
     """Batched IVF probed-slab scoring in the KERNEL's score convention.
 
     probes: (b, nprobe); queries: (b, d). Returns (vals (b, k), flat_ids
     (b, k)) with scores 2<x,q> - ||x||^2 (the ||q||^2 constant dropped, like
     the Pallas kernel) and flat ids into grouped.reshape(-1, d).
+    ``scales`` (nlist, max_list): int8 per-row dequant of the dot output.
     """
     max_list = grouped.shape[1]
 
@@ -89,7 +114,10 @@ def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
         slabs = grouped[probe]                     # (nprobe, max_list, d)
         sq = grouped_sq[probe]
         ok = valid[probe]
-        s = 2.0 * (slabs @ query) - sq
+        s = 2.0 * (slabs.astype(query.dtype) @ query)
+        if scales is not None:
+            s = s * scales[probe]
+        s = s - sq
         s = jnp.where(ok, s, -jnp.inf)
         flat_ids = probe[:, None] * max_list + jnp.arange(max_list)[None, :]
         vals, pos = jax.lax.top_k(s.reshape(-1), k)
@@ -99,26 +127,60 @@ def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
     return jax.vmap(one)(probes, queries)
 
 
+def _dedup_scores(grouped, grouped_sq, valid, uniq, member, queries,
+                  scales=None):
+    """Shared (b, s*max_list) masked score matrix + flat id map for the
+    dedup oracles (kernel score convention)."""
+    max_list = grouped.shape[1]
+    slabs = grouped[uniq]                              # (s, max_list, d)
+    sq = grouped_sq[uniq]
+    ok = valid[uniq]
+    s = 2.0 * jnp.einsum("bd,smd->bsm", queries,
+                         slabs.astype(queries.dtype))
+    if scales is not None:
+        s = s * scales[uniq][None]
+    s = s - sq[None]
+    keep = ok[None, :, :] & member.T[:, :, None]       # (b, s, max_list)
+    s = jnp.where(keep, s, -jnp.inf)
+    flat_ids = (uniq[:, None] * max_list
+                + jnp.arange(max_list)[None, :]).reshape(-1)
+    return s.reshape(s.shape[0], -1), flat_ids
+
+
 def ref_ivf_score_topk_dedup(grouped: Array, grouped_sq: Array, valid: Array,
                              uniq: Array, member: Array, queries: Array,
-                             k: int):
+                             k: int, scales=None):
     """Probe-major deduplicated slab scoring (the dedup kernel's oracle).
 
     uniq: (s,) unique probed list ids; member: (s, b) bool — query b probed
     list uniq[s]. Same score/id convention as ``ref_ivf_score_topk_batch``.
     """
-    max_list = grouped.shape[1]
-    slabs = grouped[uniq]                              # (s, max_list, d)
-    sq = grouped_sq[uniq]
-    ok = valid[uniq]
-    s = 2.0 * jnp.einsum("bd,smd->bsm", queries, slabs) - sq[None]
-    keep = ok[None, :, :] & member.T[:, :, None]       # (b, s, max_list)
-    s = jnp.where(keep, s, -jnp.inf)
-    flat_ids = (uniq[:, None] * max_list
-                + jnp.arange(max_list)[None, :]).reshape(-1)
-    vals, pos = jax.lax.top_k(s.reshape(s.shape[0], -1), k)
+    s, flat_ids = _dedup_scores(grouped, grouped_sq, valid, uniq, member,
+                                queries, scales=scales)
+    vals, pos = jax.lax.top_k(s, k)
     ids = flat_ids[pos]
     return vals, jnp.where(jnp.isneginf(vals), 0, ids)
+
+
+def ref_ivf_score_topk_dedup_rows(grouped: Array, grouped_sq: Array,
+                                  valid: Array, uniq: Array, member: Array,
+                                  queries: Array, payload_v: Array,
+                                  payload_f: Array, k: int, scales=None):
+    """Oracle for the rows-returning dedup kernel: payload rows gathered by
+    the winning flat ids; unfilled (-inf) slots carry ZERO rows, matching
+    the kernel's init state for never-written output slots."""
+    s, flat_ids = _dedup_scores(grouped, grouped_sq, valid, uniq, member,
+                                queries, scales=scales)
+    vals, pos = jax.lax.top_k(s, k)
+    ids = flat_ids[pos]
+    dv = payload_v.shape[-1]
+    m = payload_f.shape[-1]
+    rows_v = payload_v.reshape(-1, dv)[ids].astype(jnp.float32)
+    rows_f = payload_f.reshape(-1, m)[ids].astype(jnp.float32)
+    dead = jnp.isneginf(vals)
+    rows_v = jnp.where(dead[..., None], 0.0, rows_v)
+    rows_f = jnp.where(dead[..., None], 0.0, rows_f)
+    return (vals, jnp.where(dead, 0, ids), rows_v, rows_f)
 
 
 def ref_pq_lut_qdot(queries_sub: Array, codebooks: Array) -> Array:

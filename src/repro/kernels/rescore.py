@@ -18,13 +18,22 @@ DEF_BLOCK_B = 8
 
 
 def _kernel(cv_ref, cf_ref, q_ref, fq_ref, lam_ref, out_ref):
-    cv = cv_ref[...]                  # (bb, kp, d)
-    cf = cf_ref[...]                  # (bb, kp, m)
-    q = q_ref[...]                    # (bb, d)
-    fq = fq_ref[...]                  # (bb, m)
+    # loads cast up front: bf16 / int8-dequantized candidate tiles are
+    # accepted and the norms + dots accumulate in fp32 (no-op for fp32)
+    cv = cv_ref[...].astype(jnp.float32)   # (bb, kp, d)
+    cf = cf_ref[...].astype(jnp.float32)   # (bb, kp, m)
+    q = q_ref[...].astype(jnp.float32)     # (bb, d)
+    fq = fq_ref[...].astype(jnp.float32)   # (bb, m)
     lam = lam_ref[0]
 
     def cos(a, b):  # a: (bb, kp, x), b: (bb, x)
+        # mul+sum, not a dot_general contraction: each row reduces
+        # independently, so a candidate's score does not depend on its
+        # k-position or the tile width (a contraction's CPU lowering treats
+        # main-loop vs remainder k-rows differently, and the routed path
+        # re-scores the same candidate at a different k' than the dense
+        # path).  Callers feed gather-produced tiles, so in interpret mode
+        # the inlined reduction cannot fuse into a path-dependent producer.
         num = jnp.sum(a * b[:, None, :], axis=-1)
         na = jnp.sqrt(jnp.sum(a * a, axis=-1))
         nb = jnp.sqrt(jnp.sum(b * b, axis=-1))

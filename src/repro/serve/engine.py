@@ -138,6 +138,61 @@ def _batch_step(index: FCVIIndex, delta_vn, delta_fn, delta_flat, q, f,
     return scores, ids, margin
 
 
+@partial(jax.jit, static_argnames=("k", "kp", "kd"))
+def _batch_step_rows(index: FCVIIndex, delta_vn, delta_fn, delta_flat,
+                     grouped_pv, grouped_pf, q, f, *, k: int, kp: int,
+                     kd: int):
+    """Gather-free variant of ``_batch_step`` (flat/IVF backends).
+
+    Candidate generation goes through the rows-returning search entry points
+    (``flat.search_rows`` / ``ivf.search_rows``): the winners' re-rank rows
+    come straight out of the scoring kernel's VMEM instead of a second
+    (b, k') HBM gather from ``vectors_n``/``filters_n``. ``grouped_pv``/
+    ``grouped_pf`` are the IVF grouped payload slabs (None for flat — the
+    flat payload IS ``vectors_n``/``filters_n`` in corpus order). Results
+    are bit-identical to ``_batch_step``: carried rows equal the gathered
+    rows bitwise, and unfilled (-inf) slots carry corpus row 0's payload,
+    matching the id-0 gather convention.
+    """
+    _TRACE_COUNT[0] += 1
+    cfg = index.config
+    qn, fqn = index.transform.normalize(q, f)
+    q_t = index.transform.apply_normalized(qn, fqn, use_pallas=cfg.use_pallas)
+    if cfg.backend == "ivf":
+        _, cand, rv, rf = index.backend.search_rows(
+            q_t, kp, index.vectors_n, index.filters_n,
+            grouped_pv=grouped_pv, grouped_pf=grouped_pf,
+            nprobe=cfg.nprobe, use_pallas=cfg.use_pallas)
+    else:
+        _, cand, rv, rf = index.backend.search_rows(
+            q_t, kp, index.vectors_n, index.filters_n,
+            use_pallas=cfg.use_pallas)
+    score = fcvi.combined_score(rv, rf, qn, fqn, cfg.lam,
+                                use_pallas=cfg.use_pallas)
+    scores, pos = jax.lax.top_k(score, k)
+    ids = jnp.take_along_axis(cand, pos, axis=-1)
+
+    if delta_flat is not None:
+        nd = delta_vn.shape[0]
+        if kd < nd:
+            _, dcand, drv, drf = flat_mod.search_rows(
+                delta_flat, q_t, kd, delta_vn, delta_fn,
+                use_pallas=cfg.use_pallas)
+        else:
+            dcand = jnp.broadcast_to(jnp.arange(nd)[None, :],
+                                     (q.shape[0], nd))
+            drv, drf = delta_vn[dcand], delta_fn[dcand]
+        s = fcvi.combined_score(drv, drf, qn, fqn, cfg.lam,
+                                use_pallas=cfg.use_pallas)
+        dvals, dpos = jax.lax.top_k(s, min(k, kd))
+        dids = index.size + jnp.take_along_axis(dcand, dpos, axis=-1)
+        scores, ids = flat_mod.merge_topk(scores, ids, dvals,
+                                          dids.astype(ids.dtype), k)
+
+    margin = scores[:, 0] - scores[:, -1]
+    return scores, ids, margin
+
+
 @dataclasses.dataclass
 class EngineConfig:
     """Serving-side knobs (all host-side policy; none change result values
@@ -155,6 +210,12 @@ class EngineConfig:
     compact_threshold: int = 2048  # delta rows triggering compaction
     multi_probe_r: int = 4
     router_nprobe: int = 0         # routed flat serving: probed psi-clusters
+    # gather-free re-rank: candidate generation emits the winners' re-rank
+    # ROWS (from VMEM / shard-local payloads) instead of ids that a second
+    # HBM gather (single-device) or mask+psum distributed gather (sharded)
+    # must resolve. Results are bit-identical either way; False keeps the
+    # legacy id-gather step (flat/IVF only; PQ single-device always gathers)
+    gather_free: bool = True
     # -- resilience envelope (off-trace; defaults keep behavior unchanged) --
     deadline_s: float = 0.0        # per-batch deadline; 0 disables the check
     max_retries: int = 2           # bounded retry on TransientShardError
@@ -186,6 +247,13 @@ class EngineStats:
     router_fallbacks: int = 0
     shards_active: int = 0
     shard_steps: int = 0
+    # -- storage-bandwidth accounting (off-trace, model-based) ------------
+    # HBM bytes the candidate-generation scans streamed, modeled per batch
+    # from the index's slab array sizes (flat: the whole slab; IVF: the
+    # probed fraction; PQ: the code matrix) — what makes the fp32 -> bf16 ->
+    # int8 storage ladder visible as a served-bytes number
+    bytes_scanned: int = 0
+    scan_batches: int = 0          # batches the bytes model accounted
     # -- degraded serving / resilience envelope ---------------------------
     degraded_batches: int = 0      # batches served with >= 1 dead shard
     uncovered_queries: int = 0     # queries whose coverage flag was raised
@@ -201,6 +269,21 @@ class EngineStats:
     @property
     def qps(self) -> float:
         return self.queries / self.total_time_s if self.total_time_s else 0.0
+
+    @property
+    def bytes_per_query(self) -> float:
+        """Modeled scan bytes per served query (cache hits included in the
+        denominator — they stream nothing, which is the point of the cache)."""
+        return self.bytes_scanned / self.queries if self.queries else 0.0
+
+    @property
+    def effective_bandwidth_gbps(self) -> float:
+        """Modeled scan bytes / serving wall time, in GB/s: how fast the
+        engine streams index storage. Rises along the storage-dtype ladder
+        only if the qps gain matches the bytes drop."""
+        if not self.total_time_s:
+            return 0.0
+        return self.bytes_scanned / self.total_time_s / 1e9
 
     @property
     def shard_skip_rate(self) -> float:
@@ -265,6 +348,7 @@ class FCVIEngine:
         self._delta_f: list = []
         self._delta: Optional[_DeltaBuffer] = None
         self._mesh, self._rules, self._placement = mesh, rules, placement
+        self._grouped_payload = None  # IVF gather-free payload slabs (lazy)
         if routing not in ("dense", "routed"):
             raise ValueError(
                 f"routing must be 'dense' or 'routed', got {routing!r}")
@@ -322,6 +406,39 @@ class FCVIEngine:
         self._cache.move_to_end(key)
         while len(self._cache) > self.cfg.cache_entries:
             self._cache.popitem(last=False)
+
+    # -- storage-bandwidth accounting (off-trace model) --------------------
+    def _batch_scan_bytes(self, b: int) -> int:
+        """Modeled HBM bytes candidate generation streams for one padded
+        batch of ``b`` queries: flat scans the whole slab (vectors + norms +
+        int8 scales), IVF streams the probed fraction of the grouped slabs
+        (dedup-capped at nlist), PQ sweeps the code matrix; a pending delta
+        adds its flat slab. Off-trace and model-based — it counts the bytes
+        the scan semantically reads, which is what the storage-dtype ladder
+        changes — so the hot path stays untouched."""
+        be = self.index.backend
+        cfg = self.index.config
+        if cfg.backend == "flat":
+            n = be.vectors.nbytes + be.sq_norms.nbytes
+            if be.scales is not None:
+                n += be.scales.nbytes
+        elif cfg.backend == "ivf":
+            slab = be.grouped.nbytes + be.grouped_sq.nbytes
+            if be.grouped_scales is not None:
+                n = slab + be.grouped_scales.nbytes
+            else:
+                n = slab
+            nlist = be.nlist
+            probed = min(b * min(cfg.nprobe, nlist), nlist)
+            n = (n * probed) // nlist + be.centroids.nbytes
+        else:
+            n = be.codes.nbytes + be.coarse_ids.nbytes
+        delta = self._delta
+        if delta is not None:
+            n += delta.flat.vectors.nbytes + delta.flat.sq_norms.nbytes
+            if delta.flat.scales is not None:
+                n += delta.flat.scales.nbytes
+        return int(n)
 
     # -- input hardening ---------------------------------------------------
     def _validate_inputs(self, queries, filters):
@@ -458,6 +575,8 @@ class FCVIEngine:
             qj, fj = jnp.asarray(q), jnp.asarray(f)
             scores, ids, covered = self._dispatch_batch(
                 qj, fj, k, n_real=len(idxs), alive=alive)
+            self.stats.bytes_scanned += self._batch_scan_bytes(bs)
+            self.stats.scan_batches += 1
             scores, ids = np.asarray(scores), np.asarray(ids)
             for j, i in enumerate(idxs):
                 out_scores[i], out_ids[i] = scores[j], ids[j]
@@ -547,7 +666,8 @@ class FCVIEngine:
         if self._routed:
             out = self._sharded.step(
                 self._sharded_delta_view(dflat), q, f,
-                k=k, kp=kp, kd=kd, routed=True, alive=alive)
+                k=k, kp=kp, kd=kd, routed=True, alive=alive,
+                gather_free=self.cfg.gather_free)
             if degraded:
                 scores, ids, margin, flag, rmask, unc = out
                 unc = np.array(unc)
@@ -624,16 +744,42 @@ class FCVIEngine:
             self._sharded_delta = self._sharded.shard_delta(self._delta)
         return self._sharded_delta
 
+    def _rows_payload(self):
+        """IVF gather-free payload slabs (lazy): the re-rank originals
+        ``vectors_n``/``filters_n`` regrouped into (nlist, max_list, dim)
+        list order, so the dedup rows-kernel can emit the winners' re-rank
+        rows straight from its scan. Flat needs no extra payload — corpus
+        order IS slab order — so it returns (None, None). Invalidated on
+        ``compact()``/``heal()`` (the only events that change the corpus)."""
+        if self.index.config.backend != "ivf":
+            return None, None
+        if self._grouped_payload is None:
+            from repro.index import ivf as ivf_mod
+            lists = self.index.backend.lists
+            self._grouped_payload = (
+                ivf_mod.build_grouped_payload(self.index.vectors_n, lists),
+                ivf_mod.build_grouped_payload(self.index.filters_n, lists))
+        return self._grouped_payload
+
     def _step(self, dvn, dfn, dflat, q, f, *, k: int, kp: int, kd: int,
               alive=None):
         """Dispatch one padded batch to the single-device jitted step or the
         mesh-sharded DENSE shard_map step (identical results by
-        construction; the routed step is dispatched by ``_run_batch``)."""
+        construction; the routed step is dispatched by ``_run_batch``).
+        ``cfg.gather_free`` picks the rows-carrying step variant for the
+        flat/IVF backends (PQ re-ranks from reconstructed originals and
+        keeps the id-gather step)."""
         if self._sharded is None:
+            if (self.cfg.gather_free
+                    and self.index.config.backend in ("flat", "ivf")):
+                gpv, gpf = self._rows_payload()
+                return _batch_step_rows(self.index, dvn, dfn, dflat,
+                                        gpv, gpf, q, f, k=k, kp=kp, kd=kd)
             return _batch_step(self.index, dvn, dfn, dflat, q, f,
                                k=k, kp=kp, kd=kd)
         return self._sharded.step(self._sharded_delta_view(dflat), q, f,
-                                  k=k, kp=kp, kd=kd, alive=alive)
+                                  k=k, kp=kp, kd=kd, alive=alive,
+                                  gather_free=self.cfg.gather_free)
 
     def _staged_query(self, q, f, k):
         """Pre-jit two-stage query WITHOUT the delta merge — kept as the
@@ -699,6 +845,7 @@ class FCVIEngine:
         self._delta_v, self._delta_f = [], []
         self._delta = None
         self._sharded_delta = None
+        self._grouped_payload = None  # corpus changed: payload slabs stale
         self._router_centers = None  # corpus changed: re-derive the router
         if self._sharded is not None:
             self._build_sharded()   # re-shard the grown slabs onto the mesh
@@ -766,6 +913,7 @@ class FCVIEngine:
             self._delta_v = cand._delta_v
             self._delta_f = cand._delta_f
             self._delta = cand._delta
+            self._grouped_payload = None
             self.health = ShardHealth(self._sharded.n_shards,
                                       straggler_z=self.cfg.straggler_z)
             self._alive_sig = None

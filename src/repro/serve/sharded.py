@@ -73,8 +73,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import fcvi
 from repro.index import flat as flat_mod
+from repro.index import pq as pq_mod
 from repro.index import slab as slab_mod
-from repro.index.distributed import linear_shard_index, tree_merge_topk
+from repro.index.distributed import (linear_shard_index, tree_merge_topk,
+                                     tree_merge_topk_rows)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -109,26 +111,34 @@ def _gather_rows(local_rows: Array, gids: Array, lin, n_local: int, axes):
 
 
 def _local_flat_topk(vectors: Array, sq_norms: Array, row_ids: Array,
-                     queries: Array, kl: int, use_pallas: bool):
+                     queries: Array, kl: int, use_pallas: bool,
+                     scales: Optional[Array] = None):
     """Per-shard flat candidate generation with globally valid ids.
 
     Mirrors ``flat.search`` exactly (matmul-expansion candidate scores, then
     the fp32 exact-refine re-ordering), with padding rows (row_ids == -1,
     +inf squared norms) masked out of the refine so they can never outscore
-    real rows.
+    real rows. ``scales`` is the int8 storage rung's per-row dequant scale
+    block (sharded like the slab; 1.0 on pads). Returns (vals, global ids,
+    local slab positions) — the positions let the gather-free step pull the
+    winners' re-rank payload rows from the shard-local payload block.
     """
     nl = vectors.shape[0]
     kl = min(kl, nl)
     kk = min(nl, kl + flat_mod.REFINE_PAD)
     if use_pallas:
-        _, cand = ops.score_topk_padded(vectors, sq_norms, queries, kk)
+        _, cand = ops.score_topk_padded(vectors, sq_norms, queries, kk,
+                                        scales=scales)
     else:
         q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
-        scores = -(q2 - 2.0 * queries @ vectors.T + sq_norms[None, :])
+        dot = queries @ vectors.astype(queries.dtype).T
+        if scales is not None:
+            dot = dot * scales[None, :]
+        scores = -(q2 - 2.0 * dot + sq_norms[None, :])
         _, cand = jax.lax.top_k(scores, kk)
     vals, idx = flat_mod._exact_refine(vectors, queries, cand, kl,
-                                       mask=row_ids >= 0)
-    return vals, row_ids[idx]
+                                       mask=row_ids >= 0, scales=scales)
+    return vals, row_ids[idx], idx
 
 
 def _cluster_bounds(q_t: Array, centers: Array, radii: Array):
@@ -192,6 +202,7 @@ class ShardedDelta:
     fn: Array       # (nd_pad, m) normalized filters, sharded
     nd: int         # real delta rows
     n_local: int    # rows per shard
+    sc: Optional[Array] = None  # (nd_pad,) int8 dequant scales, 1.0 pads
 
 
 class ShardedServing:
@@ -239,10 +250,18 @@ class ShardedServing:
             self.slab = index.backend.slab().shard(
                 mesh, self.rules, placement=ivf_placement,
                 list_sizes=index.backend.list_sizes)
+        elif cfg.backend == "pq":
+            if routing == "routed":
+                raise ValueError(
+                    "routing='routed' is not supported for the PQ backend: "
+                    "ADC codes carry no per-shard routing geometry "
+                    "(contiguous row placement only)")
+            self.slab = index.backend.slab().shard(mesh, self.rules,
+                                                   placement=placement)
         else:
             raise NotImplementedError(
-                f"mesh-sharded serving supports the flat/ivf backends, not "
-                f"{cfg.backend!r}")
+                f"mesh-sharded serving supports the flat/ivf/pq backends, "
+                f"not {cfg.backend!r}")
         self.axes = self.slab.axes
         self.sizes = tuple(mesh.shape[a] for a in self.axes)
         self.n_shards = slab_mod.axes_size(mesh, self.axes)
@@ -267,6 +286,7 @@ class ShardedServing:
         self.filters_n = self._put_rows(
             slab_mod.pad_dim0(index.filters_n, n_pad, 0))
         self._steps = {}
+        self._payload = None   # gather-free payload slabs (lazy)
 
     def _put_rows(self, x: Array) -> Array:
         return jax.device_put(x, NamedSharding(self.mesh, P(self.axes)))
@@ -280,6 +300,10 @@ class ShardedServing:
         ids = jnp.concatenate(
             [jnp.arange(nd, dtype=jnp.int32),
              jnp.full((nd_pad - nd,), -1, jnp.int32)])
+        sc = None
+        if delta.flat.scales is not None:   # int8 delta: unit-scale pads
+            sc = self._put_rows(
+                slab_mod.pad_dim0(delta.flat.scales, nd_pad, 1.0))
         return ShardedDelta(
             vt=self._put_rows(
                 slab_mod.pad_dim0(delta.flat.vectors, nd_pad, 0)),
@@ -288,7 +312,7 @@ class ShardedServing:
             row_ids=self._put_rows(ids),
             vn=self._put_rows(slab_mod.pad_dim0(delta.vn, nd_pad, 0)),
             fn=self._put_rows(slab_mod.pad_dim0(delta.fn, nd_pad, 0)),
-            nd=nd, n_local=nl,
+            nd=nd, n_local=nl, sc=sc,
         )
 
     # -- dispatch-layer routing -------------------------------------------
@@ -344,7 +368,7 @@ class ShardedServing:
     # -- the sharded batch step -------------------------------------------
     def step(self, delta: Optional[ShardedDelta], q: Array, f: Array, *,
              k: int, kp: int, kd: int, routed: bool = False,
-             alive: Optional[Array] = None):
+             alive: Optional[Array] = None, gather_free: bool = False):
         """One padded batch through the sharded hot path; same contract as
         ``engine._batch_step``: (scores (b, k), ids (b, k), margin (b,)).
         With ``routed=True`` two extra outputs follow: the per-query clipping
@@ -359,26 +383,80 @@ class ShardedServing:
         follows (True = the dead shards could have held a top-k' candidate
         for this query — flat: psi-cluster ball-bound certificate; IVF:
         a probed list is owned by a dead shard; flat without routing tables:
-        conservatively every query). The mask is a TRACED argument, so
-        marking further shards dead never retraces, and the healthy path's
-        traces are untouched (separate jit-cache key).
+        conservatively every query; PQ likewise). The mask is a TRACED
+        argument, so marking further shards dead never retraces, and the
+        healthy path's traces are untouched (separate jit-cache key).
+
+        ``gather_free=True`` swaps the re-rank stage: each shard gathers its
+        own winners' re-rank rows from its LOCAL payload block and computes
+        their combined scores in place; the cross-shard merge then carries
+        the finished scores (``tree_merge_topk_rows``) instead of one-hot
+        psum-gathering rows after the merge — results stay bit-identical,
+        but the step contains NO all-reduce collective.
         """
         degraded = alive is not None
         nld = None if delta is None else delta.n_local
-        key = (k, kp, kd, nld, routed, degraded)
+        delta_scaled = delta is not None and delta.sc is not None
+        key = (k, kp, kd, nld, routed, degraded, delta_scaled, gather_free)
         fn = self._steps.get(key)
         if fn is None:
-            fn = self._steps[key] = self._build_step(k, kp, kd, nld, routed,
-                                                     degraded)
-        args = ((self.index.transform,) + self._slab_args(routed, degraded)
-                + (self.vectors_n, self.filters_n))
+            fn = self._steps[key] = self._build_step(
+                k, kp, kd, nld, routed, degraded,
+                delta_scaled=delta_scaled, gather_free=gather_free)
+        args = (self.index.transform,) + self._slab_args(routed, degraded)
+        if gather_free:
+            args = args + self._rows_payload()
+        else:
+            args = args + (self.vectors_n, self.filters_n)
         if delta is not None:
             args = args + (delta.vt, delta.sq, delta.row_ids,
                            delta.vn, delta.fn)
+            if delta_scaled:
+                args = args + (delta.sc,)
         args = args + (q, f)
         if degraded:
             args = args + (jnp.asarray(alive, bool),)
         return fn(*args)
+
+    def _rows_payload(self):
+        """Slab-aligned re-rank payloads + replicated row-0 phantom rows for
+        the gather-free step (lazy, cached): each shard re-ranks its own
+        candidates from its OWN payload block instead of resolving ids
+        through the mask+psum distributed gather. Flat: the normalized
+        originals permuted into slab row order (contiguous placement aliases
+        the row-sharded originals outright); IVF: the originals regrouped
+        into this mesh's (slot, max_list, dim) layout; PQ: rows stay in
+        corpus order, so the sharded originals ARE the payload. The row-0
+        rows substitute unfillable (-inf) merge slots, mirroring the
+        id-0 gather convention bit-exactly."""
+        if self._payload is not None:
+            return self._payload
+        idx = self.index
+        rep = NamedSharding(self.mesh, P())
+        backend = idx.config.backend
+        if backend == "flat":
+            ids = jnp.asarray(np.asarray(self.slab.row_ids))
+            if (self.placement == "contiguous"
+                    and ids.shape[0] == self.vectors_n.shape[0]):
+                pv, pf = self.vectors_n, self.filters_n
+            else:
+                keep = (ids >= 0)[:, None]
+                safe = jnp.maximum(ids, 0)
+                pv = self._put_rows(jnp.where(keep, idx.vectors_n[safe], 0.0))
+                pf = self._put_rows(jnp.where(keep, idx.filters_n[safe], 0.0))
+        elif backend == "ivf":
+            from repro.index import ivf as ivf_mod
+            lists = jnp.asarray(np.asarray(self.slab.lists))
+            pv = self._put_rows(
+                ivf_mod.build_grouped_payload(idx.vectors_n, lists))
+            pf = self._put_rows(
+                ivf_mod.build_grouped_payload(idx.filters_n, lists))
+        else:   # pq: contiguous rows — the sharded originals alias directly
+            pv, pf = self.vectors_n, self.filters_n
+        vn0 = jax.device_put(idx.vectors_n[0], rep)
+        fn0 = jax.device_put(idx.filters_n[0], rep)
+        self._payload = (pv, pf, vn0, fn0)
+        return self._payload
 
     def _has_flat_router(self) -> bool:
         return (self.index.config.backend == "flat"
@@ -391,43 +469,67 @@ class ShardedServing:
         removes exactly the rows it owns here from the candidate space."""
         n = self.index.size
         owner = np.zeros((n,), np.int32)
-        if self.index.config.backend == "flat":
+        backend = self.index.config.backend
+        if backend == "flat":
             ids = np.asarray(self.slab.row_ids).reshape(self.n_shards, -1)
             for s in range(self.n_shards):
                 block = ids[s]
                 owner[block[block >= 0]] = s
-        else:
+        elif backend == "ivf":
             l2s = np.asarray(self.slab.list_to_shard)
             lists = np.asarray(self.index.backend.lists)
             for g in range(lists.shape[0]):
                 rows = lists[g]
                 owner[rows[rows >= 0]] = l2s[g]
+        else:
+            # PQ: contiguous row blocks — ownership is pure position
+            owner = (np.arange(n) // self.slab.n_local).astype(np.int32)
         return owner
 
     def _slab_args(self, routed: bool = False, degraded: bool = False):
         s = self.slab
-        if self.index.config.backend == "flat":
+        backend = self.index.config.backend
+        if backend == "flat":
             base = (s.vectors, s.sq_norms, s.row_ids)
             # the degraded step needs the routing tables too (coverage
             # certificate), even when serving dense
             if (routed or degraded) and self._has_flat_router():
                 base = base + (s.router_centers, s.router_radii,
                                s.cluster_to_shard)
+            if s.scales is not None:     # int8 rung: per-row dequant scales
+                base = base + (s.scales,)
             return base
-        return (s.grouped, s.grouped_sq, s.valid, s.lists, s.centroids,
-                s.c_sq, s.slot_of_list)
+        if backend == "ivf":
+            base = (s.grouped, s.grouped_sq, s.valid, s.lists, s.centroids,
+                    s.c_sq, s.slot_of_list)
+            if s.grouped_scales is not None:
+                base = base + (s.grouped_scales,)
+            return base
+        return (s.codes, s.coarse_ids, s.codebooks, s.coarse_centers,
+                s.cb_sq, s.coarse_dot)
 
     def _slab_specs(self, row, routed: bool = False, degraded: bool = False):
-        if self.index.config.backend == "flat":
+        s = self.slab
+        backend = self.index.config.backend
+        if backend == "flat":
             base = (row, row, row)
             if (routed or degraded) and self._has_flat_router():
                 base = base + (P(), P(), P())   # routing tables: replicated
+            if s.scales is not None:
+                base = base + (row,)
             return base
-        # grouped layouts are list-sharded; centroid state is replicated
-        return (row, row, row, row, P(), P(), P())
+        if backend == "ivf":
+            # grouped layouts are list-sharded; centroid state is replicated
+            base = (row, row, row, row, P(), P(), P())
+            if s.grouped_scales is not None:
+                base = base + (row,)
+            return base
+        # PQ: per-row codes / coarse ids row-sharded; LUT state replicated
+        return (row, row, P(), P(), P(), P())
 
     def _build_step(self, k: int, kp: int, kd: int, nld: Optional[int],
-                    routed: bool, degraded: bool = False):
+                    routed: bool, degraded: bool = False,
+                    delta_scaled: bool = False, gather_free: bool = False):
         from repro.serve import engine as engine_mod
 
         cfg = self.index.config
@@ -440,18 +542,37 @@ class ShardedServing:
         has_delta = nld is not None
         has_router = self._has_flat_router()
         router_np = self.router_nprobe
+        has_scales = False
+        n_local_pq = 0
         if backend == "flat":
             kl = min(kp, self.slab.n_local)
-        else:
+            has_scales = self.slab.scales is not None
+        elif backend == "ivf":
             nprobe = min(cfg.nprobe, self.slab.nlist)
             lpp = self.slab.lists_per_shard + 1
             max_list = self.slab.max_list
             kl_ivf = min(kp, nprobe * max_list)
+            has_scales = self.slab.grouped_scales is not None
+        else:
+            n_local_pq = self.slab.n_local
+            kl_pq = min(kp, n_local_pq)
+            pq_m, pq_ksub = self.slab.codebooks.shape[:2]
+            pq_ncoarse = self.slab.coarse_centers.shape[0]
 
         def flat_scan(slab_args, q_t):
             vectors, sq_norms, row_ids = slab_args[:3]
+            sc = slab_args[-1] if has_scales else None
             return _local_flat_topk(vectors, sq_norms, row_ids, q_t, kl,
-                                    use_pallas)
+                                    use_pallas, scales=sc)
+
+        def flat_scan_sc(slab_args, pv_l, pf_l, q_t, qn, fqn):
+            # gather-free: re-rank the shard's own candidates against its
+            # LOCAL payload block (cheap local gather, no cross-shard
+            # mask+psum) and let the merge carry the finished scores
+            vals, gids, pos = flat_scan(slab_args, q_t)
+            sc = fcvi.combined_score(pv_l[pos], pf_l[pos], qn, fqn, cfg.lam,
+                                     use_pallas=use_pallas)
+            return vals, gids, sc
 
         def ivf_probe(slab_args, q_t, q2):
             # coarse quantizer: replicated, identical to the single-device
@@ -464,17 +585,22 @@ class ShardedServing:
                 _, probe = jax.lax.top_k(cd, nprobe)
             return probe
 
-        def ivf_scan(slab_args, q_t, q2, probe, lin):
-            grouped, grouped_sq, valid, lists = slab_args[:4]
+        def ivf_local_slots(slab_args, probe, lin):
             slot_of = slab_args[6]
             slot = slot_of[probe]                          # (b, nprobe)
             mine = (slot // lpp) == lin
             # non-local probes go to this shard's all-invalid sentinel slot
-            local = jnp.where(mine, slot % lpp, lpp - 1)
+            return jnp.where(mine, slot % lpp, lpp - 1)
+
+        def ivf_scan(slab_args, q_t, q2, probe, lin):
+            grouped, grouped_sq, valid, lists = slab_args[:4]
+            gsc = slab_args[-1] if has_scales else None
+            local = ivf_local_slots(slab_args, probe, lin)
             if use_pallas:
                 uniq, member = ops.dedup_probes(local.astype(jnp.int32), lpp)
                 vals, flat_ids = ops.ivf_score_topk_dedup(
-                    grouped, grouped_sq, valid, uniq, member, q_t, kl_ivf)
+                    grouped, grouped_sq, valid, uniq, member, q_t, kl_ivf,
+                    scales=gsc)
                 cand = lists.reshape(-1)[flat_ids]         # -1 on pad slots
                 return vals - q2, cand
 
@@ -483,15 +609,92 @@ class ShardedServing:
                 ok = cand >= 0
                 rows = grouped[slots].reshape(-1, grouped.shape[-1])
                 row_sq = grouped_sq[slots].reshape(-1)
-                s = -(q_sq - 2.0 * rows @ qv + row_sq)
+                dot = rows.astype(qv.dtype) @ qv
+                if gsc is not None:
+                    dot = dot * gsc[slots].reshape(-1)
+                s = -(q_sq - 2.0 * dot + row_sq)
                 s = jnp.where(ok, s, -jnp.inf)
                 v, p = jax.lax.top_k(s, kl_ivf)
                 return v, jnp.where(ok, cand, -1)[p]
 
             return jax.vmap(one_query)(q_t, q2[:, 0], local)
 
-        n_slab_args = 7 if backend == "ivf" else (
-            6 if (routed or degraded) and has_router else 3)
+        def ivf_scan_sc(slab_args, pv_g, pf_g, q_t, q2, qn, fqn, probe, lin):
+            # gather-free IVF scan: candidates' payload rows come from this
+            # shard's grouped payload block by probed-slot position (local
+            # gathers), are re-ranked here, and only the scores merge
+            grouped, grouped_sq, valid, lists = slab_args[:4]
+            gsc = slab_args[-1] if has_scales else None
+            local = ivf_local_slots(slab_args, probe, lin)
+            dv, dm = pv_g.shape[-1], pf_g.shape[-1]
+            if use_pallas:
+                uniq, member = ops.dedup_probes(local.astype(jnp.int32), lpp)
+                vals, flat_ids = ops.ivf_score_topk_dedup(
+                    grouped, grouped_sq, valid, uniq, member, q_t, kl_ivf,
+                    scales=gsc)
+                cand = lists.reshape(-1)[flat_ids]         # -1 on pad slots
+                vals = vals - q2
+                rv = pv_g.reshape(-1, dv)[flat_ids]
+                rf = pf_g.reshape(-1, dm)[flat_ids]
+            else:
+
+                def one_query(qv, q_sq, slots):
+                    cand = lists[slots].reshape(-1)
+                    ok = cand >= 0
+                    rows = grouped[slots].reshape(-1, grouped.shape[-1])
+                    row_sq = grouped_sq[slots].reshape(-1)
+                    dot = rows.astype(qv.dtype) @ qv
+                    if gsc is not None:
+                        dot = dot * gsc[slots].reshape(-1)
+                    s = -(q_sq - 2.0 * dot + row_sq)
+                    s = jnp.where(ok, s, -jnp.inf)
+                    v, p = jax.lax.top_k(s, kl_ivf)
+                    rpv = pv_g[slots].reshape(-1, dv)
+                    rpf = pf_g[slots].reshape(-1, dm)
+                    return v, jnp.where(ok, cand, -1)[p], rpv[p], rpf[p]
+
+                vals, cand, rv, rf = jax.vmap(one_query)(q_t, q2[:, 0], local)
+            sc = fcvi.combined_score(rv, rf, qn, fqn, cfg.lam,
+                                     use_pallas=use_pallas)
+            return vals, cand, sc
+
+        def pq_scan(slab_args, q_t, lin):
+            """Local ADC sweep over this shard's code block; returns
+            (vals, local positions). Per-row ADC sums depend only on the
+            row's own codes + the replicated LUTs, so local values equal
+            the single-device scan's entries bitwise; position-masked pad
+            rows (codes 0) score -inf."""
+            codes, cids = slab_args[0], slab_args[1]
+            pidx = pq_mod.PQIndex(codebooks=slab_args[2], codes=codes,
+                                  coarse_centers=slab_args[3],
+                                  coarse_ids=cids, cb_sq=slab_args[4],
+                                  coarse_dot=slab_args[5])
+            luts = pq_mod.compute_luts(pidx, q_t, use_pallas=use_pallas)
+            nq = luts.shape[0]
+            if use_pallas:
+                ccodes = cids[:, None] * pq_ksub + codes
+                big = luts.transpose(0, 2, 1, 3).reshape(
+                    nq, pq_m, pq_ncoarse * pq_ksub)
+                d2 = ops.pq_score_batch(ccodes, big)       # (b, n_local)
+            else:
+                pos = (cids[:, None] * (pq_m * pq_ksub)
+                       + jnp.arange(pq_m)[None, :] * pq_ksub + codes)
+
+                def one_query(lut):
+                    return jnp.sum(lut.reshape(-1)[pos], axis=-1)
+
+                d2 = jax.vmap(one_query)(luts)
+            rowpos = lin * n_local_pq + jnp.arange(codes.shape[0])
+            s = jnp.where((rowpos < index_size)[None, :], -d2, -jnp.inf)
+            return jax.lax.top_k(s, kl_pq)
+
+        if backend == "flat":
+            n_slab_args = (3 + (3 if (routed or degraded) and has_router
+                                else 0) + (1 if has_scales else 0))
+        elif backend == "ivf":
+            n_slab_args = 7 + (1 if has_scales else 0)
+        else:
+            n_slab_args = 6
 
         def body(tfm, *args):
             engine_mod._TRACE_COUNT[0] += 1
@@ -501,10 +704,22 @@ class ShardedServing:
             if degraded:
                 alive_v = rest[-1]                 # (ns,) bool, replicated
                 rest = rest[:-1]
-            if has_delta:
-                vn_l, fn_l, dvt, dsq, dids, dvn, dfn, q, f = rest
+            vn0 = fn0 = None
+            if gather_free:
+                # slab-aligned payload blocks + replicated row-0 phantoms
+                pv_l, pf_l, vn0, fn0 = rest[:4]
+                rest = rest[4:]
             else:
-                vn_l, fn_l, q, f = rest
+                vn_l, fn_l = rest[:2]
+                rest = rest[2:]
+            dsc = None
+            if has_delta:
+                if delta_scaled:
+                    dvt, dsq, dids, dvn, dfn, dsc, q, f = rest
+                else:
+                    dvt, dsq, dids, dvn, dfn, q, f = rest
+            else:
+                q, f = rest
             lin = linear_shard_index(axes, sizes)
             ok_me = alive_v[lin] if degraded else None   # this shard alive?
             qn, fqn = tfm.normalize(q, f)
@@ -517,41 +732,46 @@ class ShardedServing:
                 if (routed or degraded) and has_router:
                     rc, rr, inc = slab_args[3:6]
                     cl_d2, cl_ub = _cluster_bounds(q_t, rc, rr)
+
+                def scan(_):
+                    if gather_free:
+                        out = flat_scan_sc(slab_args, pv_l, pf_l, q_t,
+                                           qn, fqn)
+                    else:
+                        v, g, _ = flat_scan(slab_args, q_t)
+                        out = (v, g)
+                    if routed and has_router:
+                        # routing masks VALUES only; carried local scores
+                        # stay attached and lose the merge as -inf slots
+                        out = ((jnp.where(mine_q[:, None], out[0],
+                                          -jnp.inf),) + out[1:])
+                    return out
+
+                def skip(_):
+                    out = (jnp.full((b, kl), -jnp.inf, jnp.float32),
+                           jnp.zeros((b, kl), jnp.int32))
+                    if gather_free:
+                        out = out + (jnp.zeros((b, kl), jnp.float32),)
+                    return out
+
                 if routed and has_router:
                     route_mask, bound = _flat_router(q_t, rc, rr, inc,
                                                      router_np, d2=cl_d2,
                                                      ub=cl_ub)
                     mine_q = jnp.take(route_mask, lin, axis=1)   # (b,)
-
-                    def scan(_):
-                        v, g = flat_scan(slab_args, q_t)
-                        return jnp.where(mine_q[:, None], v, -jnp.inf), g
-
-                    def skip(_):
-                        return (jnp.full((b, kl), -jnp.inf, jnp.float32),
-                                jnp.zeros((b, kl), jnp.int32))
-
                     pred = jnp.any(mine_q)
                     if degraded:     # dead == never-routed: zero-work branch
                         pred = jnp.logical_and(pred, ok_me)
-                    vals, gids = jax.lax.cond(pred, scan, skip, None)
+                    out = jax.lax.cond(pred, scan, skip, None)
                 elif degraded:
-
-                    def scan(_):
-                        return flat_scan(slab_args, q_t)
-
-                    def skip(_):
-                        return (jnp.full((b, kl), -jnp.inf, jnp.float32),
-                                jnp.zeros((b, kl), jnp.int32))
-
-                    vals, gids = jax.lax.cond(ok_me, scan, skip, None)
+                    out = jax.lax.cond(ok_me, scan, skip, None)
                     if routed:   # 1-shard mesh: routing is a no-op
                         route_mask = jnp.ones((b, ns), bool)
                 else:
-                    vals, gids = flat_scan(slab_args, q_t)
+                    out = scan(None)
                     if routed:   # 1-shard mesh: routing is a no-op
                         route_mask = jnp.ones((b, ns), bool)
-            else:
+            elif backend == "ivf":
                 q2 = jnp.sum(q_t * q_t, axis=-1, keepdims=True)
                 probe = ivf_probe(slab_args, q_t, q2)
                 if routed or degraded:
@@ -559,37 +779,65 @@ class ShardedServing:
                     # mask is exact, and the degraded coverage certificate
                     # just checks probed-list ownership against the mask
                     shard_of = slab_args[6][probe] // lpp      # (b, nprobe)
+
+                def scan(_):
+                    if gather_free:
+                        return ivf_scan_sc(slab_args, pv_l, pf_l, q_t, q2,
+                                           qn, fqn, probe, lin)
+                    return ivf_scan(slab_args, q_t, q2, probe, lin)
+
+                def skip(_):
+                    out = (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
+                           jnp.full((b, kl_ivf), -1, jnp.int32))
+                    if gather_free:
+                        out = out + (jnp.zeros((b, kl_ivf), jnp.float32),)
+                    return out
+
                 if routed:
                     route_mask = jnp.any(
                         shard_of[:, :, None] == jnp.arange(ns)[None, None, :],
                         axis=1)                                # (b, ns)
                     mine_q = jnp.take(route_mask, lin, axis=1)
-
-                    def scan(_):
-                        return ivf_scan(slab_args, q_t, q2, probe, lin)
-
-                    def skip(_):
-                        return (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
-                                jnp.full((b, kl_ivf), -1, jnp.int32))
-
                     pred = jnp.any(mine_q)
                     if degraded:
                         pred = jnp.logical_and(pred, ok_me)
-                    vals, gids = jax.lax.cond(pred, scan, skip, None)
+                    out = jax.lax.cond(pred, scan, skip, None)
                 elif degraded:
-
-                    def scan(_):
-                        return ivf_scan(slab_args, q_t, q2, probe, lin)
-
-                    def skip(_):
-                        return (jnp.full((b, kl_ivf), -jnp.inf, jnp.float32),
-                                jnp.full((b, kl_ivf), -1, jnp.int32))
-
-                    vals, gids = jax.lax.cond(ok_me, scan, skip, None)
+                    out = jax.lax.cond(ok_me, scan, skip, None)
                 else:
-                    vals, gids = ivf_scan(slab_args, q_t, q2, probe, lin)
+                    out = scan(None)
+            else:   # pq (routed is rejected at construction)
 
-            vals, gids = tree_merge_topk(vals, gids, axes, sizes, kp)
+                def scan(_):
+                    vals, p = pq_scan(slab_args, q_t, lin)
+                    gids = lin * n_local_pq + p
+                    if gather_free:
+                        # contiguous ownership: local position p IS the row
+                        sc = fcvi.combined_score(pv_l[p], pf_l[p], qn, fqn,
+                                                 cfg.lam,
+                                                 use_pallas=use_pallas)
+                        return vals, gids, sc
+                    return vals, gids
+
+                def skip(_):
+                    out = (jnp.full((b, kl_pq), -jnp.inf, jnp.float32),
+                           jnp.zeros((b, kl_pq), jnp.int32))
+                    if gather_free:
+                        out = out + (jnp.zeros((b, kl_pq), jnp.float32),)
+                    return out
+
+                if degraded:
+                    out = jax.lax.cond(ok_me, scan, skip, None)
+                else:
+                    out = scan(None)
+
+            if gather_free:
+                vals, gids, sc = out
+                vals, gids, (scc,) = tree_merge_topk_rows(
+                    vals, gids, (sc[..., None],), axes, sizes, kp)
+            else:
+                vals, gids = out
+                vals, gids = tree_merge_topk(vals, gids, axes, sizes, kp)
             if routed:
                 if backend == "flat" and has_router:
                     # may routing have clipped the dense top-k'? A -inf
@@ -629,30 +877,55 @@ class ShardedServing:
                     uncovered = jnp.any(
                         jnp.logical_not(alive_v[shard_of]), axis=1)
                 else:
-                    # contiguous flat placement has no routing geometry:
+                    # contiguous flat/PQ placement has no routing geometry:
                     # conservatively flag every query while any shard is dead
                     uncovered = jnp.broadcast_to(
                         jnp.any(jnp.logical_not(alive_v)), (b,))
             # mirror the single-device id convention for unfillable rows
             gids = jnp.where(jnp.isneginf(vals), 0, jnp.maximum(gids, 0))
 
-            cv = _gather_rows(vn_l, gids, lin, rows_local, axes)
-            cf = _gather_rows(fn_l, gids, lin, rows_local, axes)
-            score = fcvi.combined_score(cv, cf, qn, fqn, cfg.lam,
-                                        use_pallas=use_pallas)
+            if gather_free:
+                # -inf merge slots mirror the legacy forced-gid-0 gather:
+                # score the replicated corpus-row-0 phantom through the same
+                # gather-fed rescore tile shape convention and substitute it
+                # where the merge left -inf
+                z = jnp.zeros((b, 1), jnp.int32)
+                s0 = fcvi.combined_score(vn0[None][z], fn0[None][z], qn, fqn,
+                                         cfg.lam, use_pallas=use_pallas)
+                score = jnp.where(jnp.isneginf(vals), s0, scc[..., 0])
+            else:
+                cv = _gather_rows(vn_l, gids, lin, rows_local, axes)
+                cf = _gather_rows(fn_l, gids, lin, rows_local, axes)
+                score = fcvi.combined_score(cv, cf, qn, fqn, cfg.lam,
+                                            use_pallas=use_pallas)
             scores, pos = jax.lax.top_k(score, k)
             ids = jnp.take_along_axis(gids, pos, axis=-1)
 
             if has_delta:
-                dvals, dgids = _local_flat_topk(dvt, dsq, dids, q_t,
-                                                min(kd, nld), use_pallas)
-                dvals, dgids = tree_merge_topk(dvals, dgids, axes, sizes, kd)
-                safe = jnp.maximum(dgids, 0)
-                dcv = _gather_rows(dvn, safe, lin, nld, axes)
-                dcf = _gather_rows(dfn, safe, lin, nld, axes)
-                s = fcvi.combined_score(dcv, dcf, qn, fqn, cfg.lam,
-                                        use_pallas=use_pallas)
+                kdl = min(kd, nld)
+                if gather_free:
+                    dvals, dgids, dpos = _local_flat_topk(dvt, dsq, dids,
+                                                          q_t, kdl,
+                                                          use_pallas,
+                                                          scales=dsc)
+                    ds = fcvi.combined_score(dvn[dpos], dfn[dpos], qn, fqn,
+                                             cfg.lam, use_pallas=use_pallas)
+                    dvals, dgids, (dss,) = tree_merge_topk_rows(
+                        dvals, dgids, (ds[..., None],), axes, sizes, kd)
+                    s = dss[..., 0]
+                else:
+                    dvals, dgids, _ = _local_flat_topk(dvt, dsq, dids, q_t,
+                                                       kdl, use_pallas,
+                                                       scales=dsc)
+                    dvals, dgids = tree_merge_topk(dvals, dgids, axes,
+                                                   sizes, kd)
+                    safe = jnp.maximum(dgids, 0)
+                    dcv = _gather_rows(dvn, safe, lin, nld, axes)
+                    dcf = _gather_rows(dfn, safe, lin, nld, axes)
+                    s = fcvi.combined_score(dcv, dcf, qn, fqn, cfg.lam,
+                                            use_pallas=use_pallas)
                 s = jnp.where(dgids >= 0, s, -jnp.inf)
+                safe = jnp.maximum(dgids, 0)
                 dv, dp = jax.lax.top_k(s, min(k, kd))
                 did = index_size + jnp.take_along_axis(safe, dp, axis=-1)
                 scores, ids = flat_mod.merge_topk(scores, ids, dv,
@@ -667,9 +940,15 @@ class ShardedServing:
             return out
 
         row = P(axes)
-        specs = (P(),) + self._slab_specs(row, routed, degraded) + (row, row)
+        specs = (P(),) + self._slab_specs(row, routed, degraded)
+        if gather_free:
+            specs = specs + (row, row, P(), P())   # payloads + row-0 phantoms
+        else:
+            specs = specs + (row, row)
         if has_delta:
-            specs = specs + (row, row, row, row, row)
+            specs = specs + (row,) * 5
+            if delta_scaled:
+                specs = specs + (row,)
         specs = specs + (P(), P())
         if degraded:
             specs = specs + (P(),)     # alive mask: replicated, traced

@@ -57,6 +57,62 @@ def test_roofline_dominant():
     assert t2["dominant"] == "compute"
 
 
+@pytest.mark.slow
+def test_gather_free_step_has_no_all_reduce():
+    """Acceptance for the gather-free re-rank: the compiled sharded step
+    contains NO all-reduce collective (the mask+psum candidate gather it
+    replaces compiles to one), while the legacy step still does. Runs on 8
+    forced host devices in a subprocess so the mesh is real."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.launch import hlo_analysis as H
+    from repro.serve.engine import EngineConfig, FCVIEngine
+
+    assert len(jax.devices()) == 8
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    mesh = make_mesh((8, 1), ("data", "model"))
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat")
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
+
+    def step_hlo(gather_free):
+        eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                           gather_free=gather_free),
+                         mesh=mesh)
+        eng.search(np.asarray(q), np.asarray(fq))   # populate the step cache
+        sh = eng._sharded
+        (key,) = [kk for kk in sh._steps if kk[7] == gather_free]
+        fn = sh._steps[key]
+        b = eng.cfg.batch_size
+        args = (sh.index.transform,) + sh._slab_args(False, False)
+        args += sh._rows_payload() if gather_free else (sh.vectors_n,
+                                                        sh.filters_n)
+        args += (jnp.zeros((b, spec.d), jnp.float32),
+                 jnp.zeros((b, fq.shape[-1]), jnp.float32))
+        return fn.lower(*args).compile().as_text()
+
+    gf = H.collective_stats(step_hlo(True))
+    lg = H.collective_stats(step_hlo(False))
+    assert not any("all-reduce" in op for op in gf), gf
+    assert any("all-reduce" in op for op in lg), lg
+    print("gather-free step collective-free OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
 def test_collectives_detected_in_sharded_module():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_mesh  # papers over AxisType API skew

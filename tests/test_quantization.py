@@ -1,0 +1,295 @@
+"""Int8 storage rung: quantization edge cases and end-to-end exactness.
+
+The contract under test (see ``repro.index.quant``): int8 slabs hold per-row
+symmetric codes plus one fp32 scale; scoring streams the codes and scales the
+matmul OUTPUT so accumulation stays fp32; the exact-refine / combined-score
+re-rank always runs on fp32 rows. Consequences pinned here:
+
+  * degenerate rows (constant, all-zero, saturating outliers) quantize to
+    finite codes/scales and never produce NaN scores;
+  * empty IVF lists coexist with int8 grouped slabs;
+  * the dedup kernel agrees with the jnp reference bit-for-bit with scales;
+  * ``ops.rescore`` accepts fp32 / bf16 / int8-dequantized candidate tiles
+    and accumulates fp32 (the dtype matrix);
+  * the engine's FINAL top-k ids and scores from int8 storage are identical
+    to the fp32 reference — meshless here, sharded/routed/degraded in the
+    slow subprocess cases — and survive save/restore onto a different mesh.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build, fcvi
+from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+from repro.index import quant
+from repro.kernels import ops
+from repro.kernels.ivf_score import dedup_probes
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 8, seed=3)
+    return corpus, np.asarray(q), np.asarray(fq)
+
+
+# ---------------------------------------------------------------- quant unit
+
+
+def test_constant_rows_zero_range_guard():
+    """Zero value range must not produce a 0 scale (0/0 codes): the scale is
+    clamped to 1.0 and the codes are exactly zero."""
+    x = jnp.stack([jnp.zeros(16), jnp.full(16, 3.5), jnp.full(16, -0.25)])
+    codes, scales = quant.quantize_rows(x)
+    assert np.isfinite(np.asarray(scales)).all()
+    assert np.asarray(scales)[0] == 1.0            # all-zero row
+    y = np.asarray(quant.dequantize_rows(codes, scales))
+    assert np.isfinite(y).all()
+    np.testing.assert_array_equal(y[0], np.zeros(16))
+    # constant rows round-trip exactly: every element IS the row max
+    np.testing.assert_allclose(y[1], 3.5, rtol=0, atol=0)
+    np.testing.assert_allclose(y[2], -0.25, rtol=0, atol=0)
+
+
+def test_saturating_outlier_rows_never_clip():
+    """The scale is derived from the row max, so |codes| <= 127 by
+    construction even for extreme outliers — no wraparound, no inf."""
+    r = np.random.default_rng(0)
+    x = r.normal(size=(8, 32)).astype(np.float32)
+    x[:, 0] = [1e30, -1e30, 1e8, 127.0, 1e-30, 5e37, -5e37, 0.0]
+    codes, scales = quant.quantize_rows(jnp.asarray(x))
+    c = np.asarray(codes, np.int32)
+    assert np.abs(c).max() <= 127
+    assert np.isfinite(np.asarray(scales)).all()
+    y = np.asarray(quant.dequantize_rows(codes, scales))
+    assert np.isfinite(y).all()
+    # the outlier element itself reconstructs to within one quantization step
+    np.testing.assert_allclose(y[2, 0], 1e8, rtol=1 / 127)
+
+
+def test_empty_input_quantizes():
+    codes, scales = quant.quantize_rows(jnp.zeros((0, 16)))
+    assert codes.shape == (0, 16) and scales.shape == (0,)
+
+
+# ------------------------------------------------------------ index behavior
+
+
+def test_empty_ivf_lists_with_int8(data):
+    """More centroids than natural clusters leaves some IVF lists empty;
+    their all-pad grouped rows must quantize benignly (scale-1 zero rows)
+    and the int8 results must match fp32 exactly after refine."""
+    corpus, q, fq = data
+    # 3 distinct points repeated -> kmeans with 16 centroids leaves most
+    # lists empty
+    base = np.asarray(corpus.vectors[:3])
+    vecs = np.tile(base, (20, 1)).astype(np.float32)
+    filt = np.tile(np.asarray(corpus.filters[:3]), (20, 1)).astype(np.float32)
+    out = {}
+    for st in ("float32", "int8"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="ivf", nlist=16,
+                         nprobe=16, storage_dtype=st)
+        idx = build(jnp.asarray(vecs), jnp.asarray(filt), cfg)
+        assert int(np.asarray(idx.backend.list_sizes).min()) == 0
+        out[st] = fcvi.query(idx, jnp.asarray(q), jnp.asarray(fq), 5)
+    (s0, i0), (s1, i1) = out["float32"], out["int8"]
+    assert np.isfinite(np.asarray(s0)).all()
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_dedup_kernel_int8_parity(data):
+    """The probe-major dedup kernel must agree with the jnp reference when
+    streaming int8 codes with per-row scales. Raw candidate scores are
+    allclose, not bit-equal — the kernel scales the dot OUTPUT (one multiply
+    per score) while the reference dequantizes rows before the dot; the
+    engine's FINAL top-k is still bit-identical across both because exact
+    refine re-scores candidates on fp32 rows (pinned below)."""
+    corpus, q, fq = data
+    idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="ivf",
+                           nlist=16, nprobe=4, storage_dtype="int8"))
+    bk = idx.backend
+    qn, fqn = idx.transform.normalize(jnp.asarray(q), jnp.asarray(fq))
+    q_t = idx.transform.apply_normalized(qn, fqn)
+    d2 = (jnp.sum(q_t**2, 1, keepdims=True)
+          - 2 * q_t @ bk.centroids.T + jnp.sum(bk.centroids**2, 1))
+    probes = jax.lax.top_k(-d2, 4)[1].astype(jnp.int32)
+    uniq, member = dedup_probes(probes, bk.nlist)
+    va, ia = ops.ivf_score_topk_dedup(bk.grouped, bk.grouped_sq, bk.valid,
+                                      uniq, member, q_t, 10,
+                                      scales=bk.grouped_scales,
+                                      use_pallas=True)
+    vb, ib = ops.ivf_score_topk_dedup(bk.grouped, bk.grouped_sq, bk.valid,
+                                      uniq, member, q_t, 10,
+                                      scales=bk.grouped_scales,
+                                      use_pallas=False)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                               rtol=1e-5, atol=1e-4)
+    # same candidates in the same order (no near-tie swaps at this scale)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+def test_rescore_dtype_matrix():
+    """``ops.rescore`` accepts bf16 / int8-dequantized candidate tiles: both
+    the kernel and the jnp reference cast up front and accumulate fp32, so
+    each reduced-precision input scores IDENTICALLY to its fp32-cast self
+    (the fp32-accumulation contract), and kernel/reference agree to fp32
+    round-off at every rung (their cosine formulations differ by a ULP)."""
+    r = np.random.default_rng(1)
+    b, kp, d, m = 8, 16, 32, 8
+    cv = r.normal(size=(b, kp, d)).astype(np.float32)
+    cf = r.normal(size=(b, kp, m)).astype(np.float32)
+    qn = r.normal(size=(b, d)).astype(np.float32)
+    fqn = r.normal(size=(b, m)).astype(np.float32)
+
+    def variants(x):
+        codes, scales = quant.quantize_rows(jnp.asarray(x))
+        deq = quant.dequantize_rows(codes, scales)
+        return {"float32": jnp.asarray(x),
+                "bfloat16": jnp.asarray(x).astype(jnp.bfloat16),
+                "int8-dequant": deq}
+
+    for name, v in variants(cv).items():
+        f = variants(cf)[name]
+        kern = ops.rescore(v, f, jnp.asarray(qn), jnp.asarray(fqn), 0.6,
+                           use_pallas=True)
+        ref = ops.rescore(v, f, jnp.asarray(qn), jnp.asarray(fqn), 0.6,
+                          use_pallas=False)
+        assert kern.dtype == jnp.float32, name
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+        # reduced-precision inputs score exactly as their fp32 upcasts
+        up = ops.rescore(v.astype(jnp.float32), f.astype(jnp.float32),
+                         jnp.asarray(qn), jnp.asarray(fqn), 0.6,
+                         use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(kern), np.asarray(up))
+
+
+# ------------------------------------------------------------- engine final
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_int8_final_topk_matches_fp32(data, backend, use_pallas):
+    """Acceptance: the engine's final top-k ids AND scores from int8 storage
+    are identical to the fp32 reference — the exact-refine pass re-scores
+    candidates on fp32 rows, so quantization only perturbs candidate
+    GENERATION, and the over-retrieval margin absorbs that."""
+    corpus, q, fq = data
+    out = {}
+    for st in ("float32", "int8"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=8, use_pallas=use_pallas,
+                         storage_dtype=st)
+        idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters),
+                    cfg)
+        eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16))
+        out[st] = tuple(map(np.asarray, eng.search(q, fq)))
+    np.testing.assert_array_equal(out["float32"][1], out["int8"][1])
+    np.testing.assert_array_equal(out["float32"][0], out["int8"][0])
+
+
+@pytest.mark.slow
+def test_int8_sharded_routed_degraded_matches_fp32():
+    """Int8 == fp32 holds through every serving topology: 8-shard dense,
+    filter-routed (cluster placement) and degraded (1 dead shard)."""
+    run_in_subprocess("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import EngineConfig, FCVIEngine
+
+    assert len(jax.devices()) == 8
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    q, fq = np.asarray(q), np.asarray(fq)
+    mesh = make_mesh((8, 1), ("data", "model"))
+
+    def res(backend, st, **kw):
+        dead = kw.pop("dead", None)
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4, storage_dtype=st)
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=16),
+                         mesh=mesh, **kw)
+        if dead:
+            eng.health.mark_dead(dead)
+        return tuple(np.asarray(x) for x in eng.search(q, fq))
+
+    for backend in ("flat", "ivf"):
+        pl = "cluster" if backend == "flat" else "contiguous"
+        for kw in (dict(),
+                   dict(routing="routed", placement=pl),
+                   dict(dead=[1])):
+            a = res(backend, "float32", **dict(kw))
+            b = res(backend, "int8", **dict(kw))
+            assert (a[1] == b[1]).all(), (backend, kw)
+            assert (a[0] == b[0]).all(), (backend, kw)
+    print("int8 topology matrix OK")
+    """)
+
+
+@pytest.mark.slow
+def test_int8_save_restore_onto_different_mesh():
+    """An int8 engine checkpointed from an 8-device mesh must restore onto a
+    2-device mesh (and meshless) with the quantized slabs intact and serve
+    identical results — including pending delta rows."""
+    run_in_subprocess("""
+    import numpy as np, jax, jax.numpy as jnp, tempfile
+    from repro.core import FCVIConfig, build
+    from repro.data.synthetic import CorpusSpec, make_corpus, sample_queries
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import EngineConfig, FCVIEngine
+
+    assert len(jax.devices()) == 8
+    spec = CorpusSpec(n=1000, d=64, n_categories=5, n_numeric=3, seed=2)
+    corpus = make_corpus(spec)
+    q, fq = sample_queries(corpus, 5, seed=3)
+    q, fq = np.asarray(q), np.asarray(fq)
+
+    for backend in ("flat", "ivf"):
+        cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                         nlist=16, nprobe=4, storage_dtype="int8")
+        idx = build(jnp.asarray(corpus.vectors),
+                    jnp.asarray(corpus.filters), cfg)
+        e8 = FCVIEngine(idx, EngineConfig(k=5, batch_size=16,
+                                          compact_threshold=256),
+                        mesh=make_mesh((8, 1), ("data", "model")))
+        r = np.random.default_rng(0)
+        e8.insert(r.normal(size=(20, spec.d)).astype(np.float32),
+                  corpus.filters[:20].copy())
+        want = tuple(np.asarray(x) for x in e8.search(q, fq))
+        tmp = tempfile.mkdtemp()
+        e8.save(tmp, step=1)
+        for mesh in (make_mesh((2, 1), ("data", "model")), None):
+            er = FCVIEngine.restore(tmp, mesh=mesh)
+            assert er.index.config.storage_dtype == "int8", backend
+            got = tuple(np.asarray(x) for x in er.search(q, fq))
+            assert (want[1] == got[1]).all(), (backend, mesh)
+            assert (want[0] == got[0]).all(), (backend, mesh)
+    print("int8 elastic restore OK")
+    """)

@@ -77,12 +77,19 @@ def test_one_device_mesh_identical_with_delta(data, backend, use_pallas):
     _assert_identical(e0.search(q, fq), e1.search(q, fq))
 
 
-def test_pq_backend_refuses_mesh(data):
-    corpus, _, _ = data
-    cfg = FCVIConfig(backend="pq", pq_m=8, pq_ksub=32, pq_coarse=8)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_pq_backend_serves_on_mesh(data, use_pallas):
+    """PQ is mesh-servable: replicated codebook LUT terms, row-sharded
+    codes. A 1-device mesh must be bit-identical to the meshless engine."""
+    corpus, q, fq = data
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="pq", pq_m=8,
+                     pq_ksub=32, pq_coarse=8, use_pallas=use_pallas)
     idx = build(jnp.asarray(corpus.vectors), jnp.asarray(corpus.filters), cfg)
-    with pytest.raises(NotImplementedError):
-        FCVIEngine(idx, mesh=make_mesh((1, 1), ("data", "model")))
+    kw = dict(k=5, batch_size=16, compact_threshold=256)
+    e0 = FCVIEngine(idx, EngineConfig(**kw))
+    e1 = FCVIEngine(idx, EngineConfig(**kw),
+                    mesh=make_mesh((1, 1), ("data", "model")))
+    _assert_identical(e0.search(q, fq), e1.search(q, fq))
 
 
 def test_save_restore_roundtrip_meshless(data, tmp_path):
@@ -131,7 +138,8 @@ _SUBPROCESS_PRELUDE = """
 
     def engines(backend, use_pallas, mesh, placement="contiguous"):
         cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
-                         nlist=16, nprobe=4, use_pallas=use_pallas)
+                         nlist=16, nprobe=4, pq_m=8, pq_ksub=32,
+                         pq_coarse=8, use_pallas=use_pallas)
         idx = build(jnp.asarray(corpus.vectors),
                     jnp.asarray(corpus.filters), cfg)
         ek = dict(k=5, batch_size=16, compact_threshold=256)
@@ -149,14 +157,14 @@ _SUBPROCESS_PRELUDE = """
 @pytest.mark.slow
 def test_eight_device_mesh_parity():
     """Acceptance: top-k ids and scores on a forced 8-device host mesh match
-    the single-device engine exactly — flat and IVF, kernels on and off,
+    the single-device engine exactly — flat, IVF and PQ, kernels on and off,
     with a live delta buffer."""
     run_in_subprocess(_SUBPROCESS_PRELUDE + """
     mesh = make_mesh((8, 1), ("data", "model"))
     r = np.random.default_rng(0)
     nv = r.normal(size=(20, spec.d)).astype(np.float32)
     nf = corpus.filters[:20].copy()
-    for backend in ("flat", "ivf"):
+    for backend in ("flat", "ivf", "pq"):
         for use_pallas in (False, True):
             e0, e1 = engines(backend, use_pallas, mesh)
             assert e1._sharded.n_shards == 8
