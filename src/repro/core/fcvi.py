@@ -298,6 +298,33 @@ def multi_probe_query(index: FCVIIndex, q: Array, filter_probes: Array, k: int,
 
 
 # ---------------------------------------------------------------------------
+# Predicate (filtered) search support
+# ---------------------------------------------------------------------------
+
+def filters_raw(index: FCVIIndex) -> Array:
+    """Raw-space attribute table recovered from the stored normalized filters.
+
+    Predicates evaluate over RAW attribute values (``repro.core.filters``);
+    an engine built with an explicit ``attributes=`` table uses that, and
+    this inverse is the fallback when only the normalized copy exists.
+    """
+    return index.transform.filt_norm.inverse(index.filters_n)
+
+
+def fold_queries(index: FCVIIndex, q: Array, fold_raw) -> Array:
+    """Transform raw queries against a predicate's raw fold target.
+
+    ``fold_raw`` is the single representative filter point the planner
+    derives per predicate (``CompiledPredicate.fold_target_raw``); all of a
+    predicate's candidates are scored in this one transformed frame, so
+    every physical plan for the predicate ranks identically.
+    """
+    return index.transform.fold_query(
+        q, jnp.asarray(fold_raw, jnp.float32),
+        use_pallas=index.config.use_pallas)
+
+
+# ---------------------------------------------------------------------------
 # Ground truth + recall (evaluation oracles)
 # ---------------------------------------------------------------------------
 

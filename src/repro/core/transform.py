@@ -250,6 +250,26 @@ class Transform:
             return psi_embedding(vn, fn, self.alpha, self.proj)
         raise ValueError(f"unknown transform mode {self.mode!r}")
 
+    def fold_query(self, q_raw: Array, fold_raw: Array, *,
+                   use_pallas: bool = False) -> Array:
+        """Transform RAW queries against a RAW-space fold target.
+
+        Predicate search has no per-query filter vector; instead the planner
+        derives one representative point per predicate (``fold_target_raw``:
+        interval midpoints / IN-list means, unconstrained dims at the column
+        mean). Folding every query against that single target puts all
+        candidates for the predicate into one consistent transformed frame.
+
+        q_raw: (..., d) raw queries; fold_raw: (m,) raw filter-space target.
+        Returns psi(norm(q), norm(fold), alpha) with the target broadcast
+        across the batch.
+        """
+        fold = jnp.broadcast_to(
+            jnp.asarray(fold_raw, q_raw.dtype),
+            (*q_raw.shape[:-1], fold_raw.shape[-1]))
+        qn, fn = self.normalize(q_raw, fold)
+        return self.apply_normalized(qn, fn, use_pallas=use_pallas)
+
 
 def fit_transform(
     vectors: Array,

@@ -272,22 +272,113 @@ def search_rows(index: FlatIndex, queries: Array, k: int, payload_v: Array,
     return vals, ids, payload_v[ids], payload_f[ids]
 
 
-@partial(jax.jit, static_argnames=("k",))
-def search_masked(index: FlatIndex, queries: Array, k: int, mask: Array):
+@partial(jax.jit, static_argnames=("k", "use_pallas"))
+def search_masked(index: FlatIndex, queries: Array, k: int, mask: Array,
+                  *, use_pallas: bool = False):
     """Exact search restricted to ``mask`` (pre-filtering primitive).
 
     mask: (n,) bool — True rows are eligible. Ineligible rows score -inf.
+    ``use_pallas`` routes candidate generation through the masked variant of
+    the fused scan kernel (the mask rides in as a kernel operand).
     """
     n = index.size
     k_out = min(k, n)
     kk = min(n, k_out + REFINE_PAD)
-    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
-    dot = queries @ index.vectors.astype(queries.dtype).T
-    if index.scales is not None:
-        dot = dot * index.scales[None, :]
-    scores = -(q2 - 2.0 * dot + index.sq_norms[None, :])
-    scores = jnp.where(mask[None, :], scores, -jnp.inf)
-    _, cand = jax.lax.top_k(scores, kk)
+    if use_pallas:
+        _, cand = ops.score_topk_padded(
+            index.vectors, index.sq_norms, queries, kk, scales=index.scales,
+            mask=mask.astype(jnp.float32))
+    else:
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        dot = queries @ index.vectors.astype(queries.dtype).T
+        if index.scales is not None:
+            dot = dot * index.scales[None, :]
+        scores = -(q2 - 2.0 * dot + index.sq_norms[None, :])
+        scores = jnp.where(mask[None, :], scores, -jnp.inf)
+        _, cand = jax.lax.top_k(scores, kk)
     vals, idx = _exact_refine(index.vectors, queries, cand, k_out, mask=mask,
                               scales=index.scales)
     return jnp.where(jnp.isinf(vals), -jnp.inf, vals), idx
+
+
+# ---------------------------------------------------------------------------
+# Filtered refine: the shared exactness anchor of the filter-algebra plans
+# ---------------------------------------------------------------------------
+#
+# Every physical plan (psi fold / in-kernel mask / routed pruning, meshless
+# or sharded) finishes through these primitives, which compute per-row fp32
+# squared distances with ONE canonical elementwise expression and break ties
+# deterministically by (distance, id). Identical candidate rows therefore
+# produce identical bits under every plan and topology — candidate
+# generation only has to guarantee the true filtered top-k is IN the
+# candidate set, never how it is ordered.
+
+#: id sentinel for dead (ineligible / unfilled) slots while sorting; maps to
+#: -1 in the final output. Sorts after every real id at equal key.
+DEAD_ID = jnp.iinfo(jnp.int32).max
+
+
+def filtered_d2(queries: Array, rows: Array) -> Array:
+    """Canonical fp32 squared distance: queries (b, d) x rows (b, c, d) or
+    (c, d) -> (b, c). Pure elementwise subtract/multiply + minor-axis sum —
+    no dot_general — so every plan computes the same bits for the same row.
+    """
+    if rows.ndim == 2:
+        rows = rows[None, :, :]
+    diff = queries[:, None, :].astype(jnp.float32) - rows
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def lexsort_topk(d2: Array, ids: Array, k: int):
+    """Smallest-k by (d2 asc, id asc) along the last axis; pads with
+    (+inf, DEAD_ID) when fewer than ``k`` entries exist."""
+    c = d2.shape[-1]
+    if c < k:
+        pad = k - c
+        d2 = jnp.concatenate(
+            [d2, jnp.full((*d2.shape[:-1], pad), jnp.inf, d2.dtype)], axis=-1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((*ids.shape[:-1], pad), DEAD_ID, ids.dtype)],
+            axis=-1)
+    d2s, idss = jax.lax.sort((d2, ids), dimension=-1, num_keys=2)
+    return d2s[..., :k], idss[..., :k]
+
+
+def finalize_filtered(d2: Array, ids: Array):
+    """(d2, ids) -> (scores, ids) in the filtered-result convention:
+    scores = -d2, dead slots = (-inf, -1)."""
+    dead = jnp.isinf(d2)
+    return (jnp.where(dead, -jnp.inf, -d2),
+            jnp.where(dead, jnp.int32(-1), ids))
+
+
+def masked_candidates(index: FlatIndex, queries: Array, kk: int, elig: Array,
+                      *, use_pallas: bool = False):
+    """Masked-scan candidate generation for the filter algebra's mask plan:
+    the (n,) eligibility mask rides into the fused kernel as an operand, so
+    ineligible rows score -inf inside the scan. Returns (cand (b, kk) corpus
+    ids, valid (b, kk) bool) for ``filtered_refine``."""
+    vals, cand = ops.score_topk_padded(
+        index.vectors, index.sq_norms, queries, kk, scales=index.scales,
+        mask=elig.astype(jnp.float32), use_pallas=use_pallas)
+    return jnp.maximum(cand, 0), ~jnp.isneginf(vals)
+
+
+def filtered_refine(vectors: Array, scales: Optional[Array], queries: Array,
+                    cand_idx: Array, cand_valid: Array, elig: Array, k: int):
+    """Exact filtered top-k over a candidate set.
+
+    cand_idx: (b, c) corpus ids (valid entries must be duplicate-free);
+    cand_valid: (b, c) bool (False = unfilled scan slot); elig: (n,) bool
+    row eligibility. Ineligible/invalid candidates get (+inf, DEAD_ID) and
+    the survivors sort by (exact fp32 d2, id). Returns (d2 (b, k),
+    ids (b, k)) — callers finish with ``finalize_filtered``.
+    """
+    rows = vectors[cand_idx].astype(jnp.float32)              # (b, c, d)
+    if scales is not None:
+        rows = rows * scales[cand_idx][..., None]
+    d2 = filtered_d2(queries, rows)
+    ok = cand_valid & elig[cand_idx]
+    d2 = jnp.where(ok, d2, jnp.inf)
+    ids = jnp.where(ok, cand_idx.astype(jnp.int32), DEAD_ID)
+    return lexsort_topk(d2, ids, k)

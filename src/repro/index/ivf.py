@@ -242,6 +242,83 @@ def search_rows(index: IVFIndex, queries: Array, k: int, payload_v: Array,
     return vals, idx, payload_v[idx], payload_f[idx]
 
 
+# ---------------------------------------------------------------------------
+# Filter-algebra candidate generation (mask / routed plans)
+# ---------------------------------------------------------------------------
+
+def grouped_mask(index: IVFIndex, elig: Array) -> Array:
+    """Row eligibility (n,) bool -> the grouped-layout candidate mask
+    (nlist, max_list) float 0/1 the dedup kernel streams (pad slots 0)."""
+    safe = jnp.maximum(index.lists, 0)
+    return (elig[safe] & (index.lists >= 0)).astype(jnp.float32)
+
+
+def masked_candidates(index: IVFIndex, queries: Array, kk: int, elig: Array,
+                      *, use_pallas: bool = False):
+    """Exhaustive masked scan over ALL lists — the mask plan's candidate
+    generator. Every eligible row competes (uniq = all list ids, full
+    member matrix), ineligible rows score -inf in-kernel. Returns
+    (cand (b, kk') corpus ids, valid (b, kk') bool) for ``filtered_refine``.
+    """
+    nlist = index.nlist
+    kk = min(kk, nlist * index.max_list)
+    uniq = jnp.arange(nlist, dtype=jnp.int32)
+    member = jnp.ones((nlist, queries.shape[0]), jnp.float32)
+    vals, flat_ids = ops.ivf_score_topk_dedup(
+        index.grouped, index.grouped_sq, index.valid, uniq, member, queries,
+        kk, scales=index.grouped_scales, mask=grouped_mask(index, elig),
+        use_pallas=use_pallas)
+    cand = index.lists.reshape(-1)[flat_ids]
+    return jnp.maximum(cand, 0), ~jnp.isneginf(vals)
+
+
+def routed_candidates(index: IVFIndex, queries: Array, kk: int, elig: Array,
+                      uniq: Array, n_live, *, use_pallas: bool = False):
+    """Masked scan restricted to a routed list set — the routed plan's
+    candidate generator: only lists holding at least one eligible row are
+    scanned (the rest of the corpus is pruned, never DMA'd).
+
+    uniq: (slots,) int32 list ids, tail slots repeating a live id (the
+    pow-2 padding from ``eligible_lists``); n_live: scalar count of live
+    slots (data — the slot-bucket SIZE is the only static part, so routed
+    predicates share traces per bucket). Returns (cand, valid) like
+    ``masked_candidates``; exhaustive over the routed lists' eligible rows.
+    """
+    b = queries.shape[0]
+    slots = uniq.shape[0]
+    kk = min(kk, slots * index.max_list)
+    member = ((jnp.arange(slots)[:, None] < n_live)
+              .astype(jnp.float32) * jnp.ones((1, b), jnp.float32))
+    vals, flat_ids = ops.ivf_score_topk_dedup(
+        index.grouped, index.grouped_sq, index.valid, uniq, member, queries,
+        kk, scales=index.grouped_scales, mask=grouped_mask(index, elig),
+        use_pallas=use_pallas)
+    cand = index.lists.reshape(-1)[flat_ids]
+    return jnp.maximum(cand, 0), ~jnp.isneginf(vals)
+
+
+def eligible_lists(lists_np: np.ndarray, elig_np: np.ndarray):
+    """Host-side routing: which inverted lists hold >= 1 eligible row.
+
+    Returns (uniq (slots,) int32, n_live int) with slots the next power of
+    two >= n_live (tail repeats the first live id, masked by ``n_live`` in
+    the traced member matrix), or None when no list qualifies (the caller
+    short-circuits to an all-empty certified result).
+    """
+    lists_np = np.asarray(lists_np)
+    elig_np = np.asarray(elig_np, bool)
+    safe = np.maximum(lists_np, 0)
+    has = (elig_np[safe] & (lists_np >= 0)).any(axis=1)
+    ids = np.nonzero(has)[0].astype(np.int32)
+    n_live = int(ids.shape[0])
+    if n_live == 0:
+        return None
+    slots = 1 << max(0, int(n_live - 1).bit_length())
+    uniq = np.full((slots,), ids[0], np.int32)
+    uniq[:n_live] = ids
+    return uniq, n_live
+
+
 def build_grouped_payload(payload: Array, lists: Array) -> Array:
     """Materialise a corpus-row-aligned payload (n, x) in the grouped
     (nlist, max_list, x) serving layout (zeros on -1 padded slots), so the

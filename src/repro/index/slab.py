@@ -130,7 +130,8 @@ class FlatSlab:
 
     def shard(self, mesh: Mesh, rules, *, placement: str = "contiguous",
               centers: Optional[Array] = None,
-              rng: Optional[Array] = None) -> "ShardedFlatSlab":
+              rng: Optional[Array] = None,
+              attrs: Optional[Array] = None) -> "ShardedFlatSlab":
         """Row-shard this slab over the mesh axes of the "corpus" rule.
 
         Args: ``mesh`` + an ``AxisRules`` whose "corpus" entry names the mesh
@@ -154,6 +155,12 @@ class FlatSlab:
         ``cluster_to_shard`` incidence (ncl, n_shards) marking every shard
         holding at least one row of each cluster (multi-hot: the load
         balancer may split a cluster's remainder across shards).
+
+        ``attrs`` optionally rides the slab: an (n, m) fp32 RAW attribute
+        table, permuted + padded alongside the rows it describes (NaN pad
+        rows — NaN compares false under every predicate, so pads are never
+        eligible) and sharded the same way, for in-shard predicate
+        evaluation by the filtered serving step.
         """
         axes = resolve_axes(mesh, rules, "corpus")
         ns = axes_size(mesh, axes)
@@ -204,11 +211,17 @@ class FlatSlab:
         if self.scales is not None:
             scales = _put(mesh, axes,
                           pad_dim0(self.scales[row_ids], n + n_pad, 1.0))
+        attrs_sh = None
+        if attrs is not None:
+            a32 = jnp.asarray(attrs, jnp.float32)
+            attrs_sh = _put(mesh, axes,
+                            pad_dim0(a32[row_ids], n + n_pad, jnp.nan))
         return ShardedFlatSlab(
             vectors=_put(mesh, axes, vec),
             sq_norms=_put(mesh, axes, sq),
             row_ids=_put(mesh, axes, ids),
             scales=scales,
+            attrs=attrs_sh,
             mesh=mesh, axes=axes, n_real=n,
             n_local=(n + n_pad) // ns, placement=placement,
             router_centers=router_centers, router_radii=router_radii,
@@ -238,6 +251,8 @@ class ShardedFlatSlab:
     router_radii: Optional[Array] = None     # (ncl,) fp32 max member distance
     cluster_to_shard: Optional[Array] = None  # (ncl, ns) 0/1 incidence
     scales: Optional[Array] = None  # (n_pad,) sharded fp32; 1.0 pad rows
+    attrs: Optional[Array] = None   # (n_pad, m) sharded fp32 RAW attrs;
+                                    # NaN pad rows (never predicate-eligible)
 
     @property
     def n_shards(self) -> int:
@@ -277,7 +292,8 @@ class IVFSlab:
         return self.lists.shape[1]
 
     def shard(self, mesh: Mesh, rules, *, placement: str = "balanced",
-              list_sizes: Optional[Array] = None) -> "ShardedIVFSlab":
+              list_sizes: Optional[Array] = None,
+              attrs: Optional[Array] = None) -> "ShardedIVFSlab":
         """List-shard the grouped layout over the "ivf_lists" rule axes.
 
         Args: ``mesh`` + an ``AxisRules`` whose "ivf_lists" entry names the
@@ -301,6 +317,12 @@ class IVFSlab:
         owner shard is ``slot_of_list[g] // (lists_per_shard + 1)``
         (``ShardedIVFSlab.list_to_shard``), which the routed serving step
         uses to skip shards owning none of a query's probed lists.
+
+        ``attrs`` optionally rides the slab: an (n, m) fp32 RAW attribute
+        table in CORPUS row order, regrouped through ``lists`` into the
+        (slot, max_list, m) layout with NaN on pad/sentinel entries (NaN is
+        never predicate-eligible) and sharded alongside the rows, for
+        in-shard predicate evaluation by the filtered serving step.
         """
         axes = resolve_axes(mesh, rules, "ivf_lists")
         ns = axes_size(mesh, axes)
@@ -346,6 +368,15 @@ class IVFSlab:
             gs = jnp.ones((ns * lpp, max_list), jnp.float32)
             grouped_scales = _put(mesh, axes,
                                   gs.at[slots].set(self.grouped_scales))
+        attrs_sh = None
+        if attrs is not None:
+            a32 = jnp.asarray(attrs, jnp.float32)
+            m = a32.shape[-1]
+            ga = jnp.where((self.lists >= 0)[..., None],
+                           a32[jnp.maximum(self.lists, 0)],
+                           jnp.nan)                    # (nlist, max_list, m)
+            full = jnp.full((ns * lpp, max_list, m), jnp.nan, jnp.float32)
+            attrs_sh = _put(mesh, axes, full.at[slots].set(ga))
         return ShardedIVFSlab(
             centroids=self.centroids,
             c_sq=jnp.sum(self.centroids.astype(jnp.float32) ** 2, axis=-1),
@@ -357,6 +388,7 @@ class IVFSlab:
             mesh=mesh, axes=axes, nlist=nlist, max_list=max_list,
             lists_per_shard=lp, placement=placement,
             grouped_scales=grouped_scales,
+            attrs=attrs_sh,
         )
 
 
@@ -378,6 +410,8 @@ class ShardedIVFSlab:
     lists_per_shard: int  # real slots per shard (local block adds 1 sentinel)
     placement: str
     grouped_scales: Optional[Array] = None  # sharded; 1.0 on sentinels/pads
+    attrs: Optional[Array] = None  # (ns*(lp+1), max_list, m) sharded fp32 RAW
+                                   # attrs; NaN on sentinels/pads
 
     @property
     def n_shards(self) -> int:

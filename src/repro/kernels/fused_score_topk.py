@@ -125,6 +125,56 @@ def _scaled_kernel(x_ref, xsq_ref, scale_ref, q_ref, qsq_ref, vals_ref,
     idx_ref[...] = new_i
 
 
+def _masked_kernel(x_ref, xsq_ref, mask_ref, q_ref, qsq_ref, vals_ref,
+                   idx_ref, *, k: int, block_rows: int):
+    """Filtered variant: a per-row 0/1 candidate mask streams alongside the
+    corpus block and ineligible rows score -inf INSIDE the scan — the filter
+    algebra's in-kernel mask plan. One extra (bn,) VPU select per block."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...]                     # (bn, d)
+    q = q_ref[...]                     # (bq, d)
+    scores = 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    scores = scores - xsq_ref[...][None, :] - qsq_ref[...][:, None]
+    scores = jnp.where(mask_ref[...][None, :] > 0.5, scores, NEG_INF)
+    gids = j * block_rows + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
+def _masked_scaled_kernel(x_ref, xsq_ref, scale_ref, mask_ref, q_ref, qsq_ref,
+                          vals_ref, idx_ref, *, k: int, block_rows: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d) int8 codes
+    q = q_ref[...]                      # (bq, d)
+    scores = 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    scores = scores * scale_ref[...][None, :]
+    scores = scores - xsq_ref[...][None, :] - qsq_ref[...][:, None]
+    scores = jnp.where(mask_ref[...][None, :] > 0.5, scores, NEG_INF)
+    gids = j * block_rows + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=-1)
+    cat_i = jnp.concatenate([idx_ref[...], gids], axis=-1)
+    new_v, new_i = _select_topk(cat_v, cat_i, k)
+    vals_ref[...] = new_v.astype(vals_ref.dtype)
+    idx_ref[...] = new_i
+
+
 def _check_tiling(n, nq, k, block_rows, block_q):
     block_rows = min(block_rows, n)
     block_q = min(block_q, nq)
@@ -138,14 +188,16 @@ def _check_tiling(n, nq, k, block_rows, block_q):
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "block_rows", "block_q", "interpret"))
-def score_topk(corpus, sq_norms, queries, k: int, *, scales=None,
+def score_topk(corpus, sq_norms, queries, k: int, *, scales=None, mask=None,
                block_rows: int = DEF_BLOCK_ROWS, block_q: int = DEF_BLOCK_Q,
                interpret: bool = True):
     """corpus: (n, d); sq_norms: (n,); queries: (q, d).
 
     Returns (scores (q, k), ids (q, k)) — negative squared L2, descending.
     ``scales`` (n,) routes to the int8 kernel variant (per-row dequant of the
-    matmul output; scores are exact for the dequantized rows).
+    matmul output; scores are exact for the dequantized rows). ``mask`` (n,)
+    float 0/1 routes to the filtered variants: rows at 0 score -inf inside
+    the scan (the in-kernel candidate-mask plan of the filter algebra).
     """
     n, d = corpus.shape
     nq = queries.shape[0]
@@ -165,20 +217,28 @@ def score_topk(corpus, sq_norms, queries, k: int, *, scales=None,
         jax.ShapeDtypeStruct((nq, k), jnp.float32),
         jax.ShapeDtypeStruct((nq, k), jnp.int32),
     )
-    if scales is None:
+    if scales is None and mask is None:
         kernel = functools.partial(_kernel, k=k, block_rows=block_rows)
-        vals, idx = pl.pallas_call(
-            kernel, grid=grid,
-            in_specs=[row_spec, rsq_spec, q_spec, qsq_spec],
-            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
-        )(corpus, sq_norms, queries, qsq)
-    else:
+        in_specs = [row_spec, rsq_spec, q_spec, qsq_spec]
+        args = (corpus, sq_norms, queries, qsq)
+    elif scales is None:
+        kernel = functools.partial(_masked_kernel, k=k, block_rows=block_rows)
+        in_specs = [row_spec, rsq_spec, rsq_spec, q_spec, qsq_spec]
+        args = (corpus, sq_norms, mask, queries, qsq)
+    elif mask is None:
         kernel = functools.partial(_scaled_kernel, k=k, block_rows=block_rows)
-        vals, idx = pl.pallas_call(
-            kernel, grid=grid,
-            in_specs=[row_spec, rsq_spec, rsq_spec, q_spec, qsq_spec],
-            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
-        )(corpus, sq_norms, scales, queries, qsq)
+        in_specs = [row_spec, rsq_spec, rsq_spec, q_spec, qsq_spec]
+        args = (corpus, sq_norms, scales, queries, qsq)
+    else:
+        kernel = functools.partial(_masked_scaled_kernel, k=k,
+                                   block_rows=block_rows)
+        in_specs = [row_spec, rsq_spec, rsq_spec, rsq_spec, q_spec, qsq_spec]
+        args = (corpus, sq_norms, scales, mask, queries, qsq)
+    vals, idx = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+    )(*args)
     return vals, idx
 
 

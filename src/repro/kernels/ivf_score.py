@@ -207,7 +207,8 @@ def _dedup_scaled_kernel(uniq_ref, slab_ref, sq_ref, sc_ref, valid_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
-                         k: int, *, scales=None, interpret: bool = True):
+                         k: int, *, scales=None, mask=None,
+                         interpret: bool = True):
     """Probe-major batched slab search over the deduplicated probed lists.
 
     grouped: (nlist, max_list, d); grouped_sq/valid: (nlist, max_list);
@@ -219,9 +220,14 @@ def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries,
     ``ivf_score_topk_batch``: scores 2<x,q> - ||x||^2, flat ids into
     grouped.reshape(-1, d). Each unique slab is DMA'd once for the whole
     batch (grid is sequential over slots, queries stay VMEM-resident).
-    ``scales`` (nlist, max_list) routes to the int8 variant.
+    ``scales`` (nlist, max_list) routes to the int8 variant. ``mask``
+    (nlist, max_list) float 0/1 is the filter algebra's candidate mask: it
+    multiplies into the validity operand the kernel streams, so ineligible
+    rows score -inf inside the scan (exact — both operands are 0/1).
     """
     nlist, max_list, d = grouped.shape
+    if mask is not None:
+        valid = valid * mask
     b = queries.shape[0]
     slots = uniq.shape[0]
 

@@ -68,19 +68,20 @@ def fused_transform(v, f, proj, alpha, mean_v, std_v, mean_f, std_f,
     return out[:n]
 
 
-def score_topk(corpus, sq_norms, queries, k, *, scales=None,
+def score_topk(corpus, sq_norms, queries, k, *, scales=None, mask=None,
                use_pallas: bool = True, block_rows: int = 128,
                block_q: int = 64):
     if not use_pallas:
-        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales)
-    return _score_topk(corpus, sq_norms, queries, k, scales=scales,
+        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales,
+                                  mask=mask)
+    return _score_topk(corpus, sq_norms, queries, k, scales=scales, mask=mask,
                        block_rows=block_rows, block_q=block_q,
                        interpret=_interpret())
 
 
-def _pad_corpus(corpus, sq_norms, scales, queries, br, bq):
-    """Zero-pad corpus rows (+inf squared norms, unit scales) and queries to
-    tile multiples; pad rows score -inf and never surface."""
+def _pad_corpus(corpus, sq_norms, scales, queries, br, bq, mask=None):
+    """Zero-pad corpus rows (+inf squared norms, unit scales, zero mask) and
+    queries to tile multiples; pad rows score -inf and never surface."""
     n, d = corpus.shape
     nq = queries.shape[0]
     n_pad = -n % br
@@ -93,30 +94,37 @@ def _pad_corpus(corpus, sq_norms, scales, queries, br, bq):
         if scales is not None:
             scales = jnp.concatenate(
                 [scales, jnp.ones((n_pad,), scales.dtype)])
+        if mask is not None:
+            mask = jnp.concatenate(
+                [mask, jnp.zeros((n_pad,), mask.dtype)])
     if q_pad:
         queries = jnp.concatenate(
             [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0)
-    return corpus, sq_norms, scales, queries
+    return corpus, sq_norms, scales, queries, mask
 
 
-def score_topk_padded(corpus, sq_norms, queries, k, *, scales=None,
+def score_topk_padded(corpus, sq_norms, queries, k, *, scales=None, mask=None,
                       use_pallas: bool = True, block_rows: int = 128,
                       block_q: int = 64):
     """``score_topk`` for arbitrary shapes: zero-pads corpus rows (with +inf
     squared norms, so pad rows score -inf and never surface) and queries to
     the kernel's tile multiples, then slices the padding back off. This is
     the dispatch used by flat candidate generation AND the IVF coarse
-    quantizer (centroid scoring is just a small score_topk)."""
+    quantizer (centroid scoring is just a small score_topk). ``mask`` (n,)
+    float 0/1 routes to the filtered kernel variants (ineligible rows score
+    -inf inside the scan); pad rows get mask 0."""
     if not use_pallas:
-        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales)
+        return ref.ref_score_topk(corpus, sq_norms, queries, k, scales=scales,
+                                  mask=mask)
     n = corpus.shape[0]
     nq = queries.shape[0]
     br = min(block_rows, n)
     bq = min(block_q, nq)
-    corpus, sq_norms, scales, queries = _pad_corpus(
-        corpus, sq_norms, scales, queries, br, bq)
+    corpus, sq_norms, scales, queries, mask = _pad_corpus(
+        corpus, sq_norms, scales, queries, br, bq, mask)
     vals, idx = _score_topk(corpus, sq_norms, queries, k, scales=scales,
-                            block_rows=br, block_q=bq, interpret=_interpret())
+                            mask=mask, block_rows=br, block_q=bq,
+                            interpret=_interpret())
     return vals[:nq], idx[:nq]
 
 
@@ -142,7 +150,7 @@ def score_topk_rows_padded(corpus, sq_norms, payload_v, payload_f, queries,
         payload_f = jnp.concatenate(
             [payload_f, jnp.zeros((n_pad, payload_f.shape[1]),
                                   payload_f.dtype)], axis=0)
-    corpus, sq_norms, scales, queries = _pad_corpus(
+    corpus, sq_norms, scales, queries, _ = _pad_corpus(
         corpus, sq_norms, scales, queries, br, bq)
     vals, idx, srows, rv, rf = _score_topk_rows(
         corpus, sq_norms, payload_v, payload_f, queries, k, scales=scales,
@@ -185,17 +193,19 @@ def ivf_score_topk_batch(grouped, grouped_sq, valid, probes, queries, k, *,
 
 
 def ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member, queries, k,
-                         *, scales=None, use_pallas: bool = True):
+                         *, scales=None, mask=None, use_pallas: bool = True):
     """Probe-major deduplicated batched slab search: uniq (s,), member (s, b),
     queries (b, d). Shared lists are DMA'd once per batch (see
     ``ivf_score.dedup_probes`` for building uniq/member from a probe matrix).
+    ``mask`` (nlist, max_list) float 0/1 is the filter algebra's candidate
+    mask, folded into the validity operand the kernel streams.
     """
     if not use_pallas:
         return ref.ref_ivf_score_topk_dedup(grouped, grouped_sq, valid > 0.5,
                                             uniq, member > 0.5, queries, k,
-                                            scales=scales)
+                                            scales=scales, mask=mask)
     return _ivf_score_topk_dedup(grouped, grouped_sq, valid, uniq, member,
-                                 queries, k, scales=scales,
+                                 queries, k, scales=scales, mask=mask,
                                  interpret=_interpret())
 
 

@@ -33,18 +33,25 @@ def ref_fused_transform(v: Array, f: Array, proj: Array, alpha,
 
 
 def ref_score_topk(corpus: Array, sq_norms: Array, queries: Array, k: int,
-                   scales=None):
+                   scales=None, mask=None):
     """Exact negative-squared-L2 top-k: the serving inner loop.
 
     ``scales`` (n,) is the int8 storage rung's per-row dequant scale; like
     the kernel it multiplies the matmul OUTPUT column (fp32 accumulation).
+    ``mask`` (n,) float 0/1 is the filter algebra's candidate mask: rows at
+    0 score -inf (their ids collapse to 0 like every other dead slot).
     """
     q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
     dot = queries @ corpus.astype(queries.dtype).T
     if scales is not None:
         dot = dot * scales[None, :]
     scores = -(q2 - 2.0 * dot + sq_norms[None, :])
-    return jax.lax.top_k(scores, k)
+    if mask is not None:
+        scores = jnp.where(mask[None, :] > 0.5, scores, -jnp.inf)
+    vals, ids = jax.lax.top_k(scores, k)
+    if mask is not None:
+        ids = jnp.where(jnp.isneginf(vals), 0, ids)
+    return vals, ids
 
 
 def ref_score_topk_rows(corpus: Array, sq_norms: Array, payload_v: Array,
@@ -128,13 +135,15 @@ def ref_ivf_score_topk_batch(grouped: Array, grouped_sq: Array, valid: Array,
 
 
 def _dedup_scores(grouped, grouped_sq, valid, uniq, member, queries,
-                  scales=None):
+                  scales=None, mask=None):
     """Shared (b, s*max_list) masked score matrix + flat id map for the
     dedup oracles (kernel score convention)."""
     max_list = grouped.shape[1]
     slabs = grouped[uniq]                              # (s, max_list, d)
     sq = grouped_sq[uniq]
     ok = valid[uniq]
+    if mask is not None:
+        ok = ok & (mask[uniq] > 0.5)
     s = 2.0 * jnp.einsum("bd,smd->bsm", queries,
                          slabs.astype(queries.dtype))
     if scales is not None:
@@ -149,14 +158,16 @@ def _dedup_scores(grouped, grouped_sq, valid, uniq, member, queries,
 
 def ref_ivf_score_topk_dedup(grouped: Array, grouped_sq: Array, valid: Array,
                              uniq: Array, member: Array, queries: Array,
-                             k: int, scales=None):
+                             k: int, scales=None, mask=None):
     """Probe-major deduplicated slab scoring (the dedup kernel's oracle).
 
     uniq: (s,) unique probed list ids; member: (s, b) bool — query b probed
     list uniq[s]. Same score/id convention as ``ref_ivf_score_topk_batch``.
+    ``mask`` (nlist, max_list) float 0/1 is the filter algebra's candidate
+    mask, ANDed into ``valid`` slot-wise.
     """
     s, flat_ids = _dedup_scores(grouped, grouped_sq, valid, uniq, member,
-                                queries, scales=scales)
+                                queries, scales=scales, mask=mask)
     vals, pos = jax.lax.top_k(s, k)
     ids = flat_ids[pos]
     return vals, jnp.where(jnp.isneginf(vals), 0, ids)

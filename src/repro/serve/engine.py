@@ -81,9 +81,15 @@ from repro.checkpoint import ckpt as ckpt_mod
 from repro.core import fcvi, theory
 from repro.core.baselines import BoxPredicate
 from repro.core.fcvi import FCVIConfig, FCVIIndex
+from repro.core.filters import Predicate, compile_predicate
 from repro.index import flat as flat_mod
+from repro.index import ivf as ivf_mod
+from repro.kernels import ops
 from repro.serve.health import (BackpressureError, ShardHealth,
                                 TransientShardError)
+from repro.serve.planner import (CANDIDATE_PAD, PLAN_FOLD, PLAN_MASK,
+                                 PLAN_ROUTED, PLANS, QueryPlanner,
+                                 _pow2_at_least)
 
 # magnitudes beyond this overflow fp32 when squared in the scoring path —
 # the input-hardening boundary rejects them as out of support
@@ -193,6 +199,105 @@ def _batch_step_rows(index: FCVIIndex, delta_vn, delta_fn, delta_flat,
     return scores, ids, margin
 
 
+# ---------------------------------------------------------------------------
+# Predicate-filtered physical plans (general filter algebra, meshless side).
+#
+# All three plans funnel into the SAME refine convention — canonical fp32
+# elementwise d2 (``flat.filtered_d2``) + deterministic (d2 asc, id asc)
+# lexsort + dead slots at (+inf, DEAD_ID) — so any plan whose candidate set
+# CONTAINS the true eligible top-k produces bit-identical output. Predicate
+# values, eligibility masks, and routed list ids enter as DATA operands; the
+# only jit keys are (k, kp, use_pallas) plus the pytree structure, so
+# steady-state filtered batches never retrace.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k", "kp", "use_pallas"))
+def _filtered_mask_step(backend, q_t, elig, *, k: int, kp: int,
+                        use_pallas: bool):
+    """MASK plan: in-kernel eligibility-masked scan, then filtered refine.
+
+    ``elig`` is a (n,) bool over corpus rows. Flat backends run the masked
+    top-k'' scan (``flat.masked_candidates``); IVF backends run the masked
+    EXHAUSTIVE all-lists dedup scan (``ivf.masked_candidates``), so the
+    candidate set always contains every eligible row within k'' — exact by
+    construction when kp >= min(k, #eligible)."""
+    _TRACE_COUNT[0] += 1
+    if isinstance(backend, flat_mod.FlatIndex):
+        cand, valid = flat_mod.masked_candidates(backend, q_t, kp, elig,
+                                                 use_pallas=use_pallas)
+        vectors, scales = backend.vectors, backend.scales
+    else:
+        cand, valid = ivf_mod.masked_candidates(backend, q_t, kp, elig,
+                                                use_pallas=use_pallas)
+        vectors, scales = backend.vectors, backend.scales
+    return flat_mod.filtered_refine(vectors, scales, q_t, cand, valid,
+                                    elig, k)
+
+
+@partial(jax.jit, static_argnames=("k", "kp", "use_pallas"))
+def _filtered_fold_step(backend, q_t, elig, *, k: int, kp: int,
+                        use_pallas: bool):
+    """FOLD plan (flat fp32 only): unmasked scan against the folded query.
+
+    ``q_t`` was transformed against the predicate's RAW-space fold target,
+    so eligible rows geometrically cluster near the query (the paper's psi
+    contraction). We over-retrieve kp unfiltered candidates, refine over the
+    eligible subset, and emit a per-query CERTIFICATE: the result is exact
+    when the candidate window held >= k eligible rows, or held every
+    eligible row there is. Uncertified rows fall back to the MASK plan
+    host-side. Returns (d2, ids, certified)."""
+    _TRACE_COUNT[0] += 1
+    vals, cand = ops.score_topk_padded(backend.vectors, backend.sq_norms,
+                                       q_t, kp, scales=backend.scales,
+                                       use_pallas=use_pallas)
+    valid = ~jnp.isneginf(vals)
+    cand = jnp.maximum(cand, 0)
+    d2, ids = flat_mod.filtered_refine(backend.vectors, backend.scales,
+                                       q_t, cand, valid, elig, k)
+    elig_in = jnp.sum(jnp.where(valid, elig[cand], False), axis=-1)
+    n_elig = jnp.sum(elig)
+    certified = (elig_in >= k) | (elig_in == n_elig)
+    return d2, ids, certified
+
+
+@partial(jax.jit, static_argnames=("k", "kp", "use_pallas"))
+def _filtered_routed_step(backend, q_t, elig, uniq, n_live, *, k: int,
+                          kp: int, use_pallas: bool):
+    """ROUTED plan (IVF meshless): scan only the lists holding eligible rows.
+
+    ``uniq`` is the pow-2-padded live list-id bucket (pads repeat a live id;
+    ``n_live`` masks them via the member operand, both DATA). Exact because
+    every eligible row lives in some routed list and the dedup scan inside
+    is exhaustive over those lists."""
+    _TRACE_COUNT[0] += 1
+    cand, valid = ivf_mod.routed_candidates(backend, q_t, kp, elig, uniq,
+                                            n_live, use_pallas=use_pallas)
+    return flat_mod.filtered_refine(backend.vectors, backend.scales, q_t,
+                                    cand, valid, elig, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _filtered_delta_step(delta_flat, q_t, delig, *, k: int):
+    """Exact filtered top-k over the delta tier (delta-LOCAL ids).
+
+    ``delig`` is eligibility over the pending raw insert rows. Exhaustive
+    elementwise d2 over the (small) delta — same canonical expression as the
+    main tiers, so the d2-space merge stays bit-stable. The engine maps the
+    returned local ids to ``index.size + j``."""
+    _TRACE_COUNT[0] += 1
+    rows = delta_flat.vectors.astype(jnp.float32)
+    if delta_flat.scales is not None:
+        rows = rows * delta_flat.scales[:, None]
+    nd = rows.shape[0]
+    d2 = flat_mod.filtered_d2(q_t, rows)
+    d2 = jnp.where(delig[None, :], d2, jnp.inf)
+    ids = jnp.where(delig, jnp.arange(nd, dtype=jnp.int32),
+                    flat_mod.DEAD_ID)
+    return flat_mod.lexsort_topk(d2, jnp.broadcast_to(ids[None, :], d2.shape),
+                                 k)
+
+
 @dataclasses.dataclass
 class EngineConfig:
     """Serving-side knobs (all host-side policy; none change result values
@@ -262,6 +367,12 @@ class EngineStats:
     backpressure_drops: int = 0    # queries shed by BackpressureError
     straggler_evictions: int = 0   # shards evicted by the health layer
     heals: int = 0                 # validated heal() cutovers
+    # -- predicate-filtered serving (filter algebra + planner) -------------
+    filtered_queries: int = 0      # queries served through search(filter=)
+    plan_fold: int = 0             # queries executed under each physical plan
+    plan_mask: int = 0
+    plan_routed: int = 0
+    filtered_fallbacks: int = 0    # FOLD queries re-run under MASK (uncertified)
     # per-query coverage flags of the LAST search call (True = certified
     # unaffected by dead shards; all-True while healthy)
     last_coverage: Optional[np.ndarray] = None
@@ -337,7 +448,8 @@ class FCVIEngine:
 
     def __init__(self, index: FCVIIndex, config: Optional[EngineConfig] = None,
                  *, mesh=None, rules=None, placement: str = "contiguous",
-                 routing: str = "dense", router_centers=None):
+                 routing: str = "dense", router_centers=None,
+                 attributes=None, attr_names=None):
         self.index = index
         # default constructed per engine: a shared EngineConfig() default
         # instance would leak mutations across engines
@@ -349,6 +461,10 @@ class FCVIEngine:
         self._delta: Optional[_DeltaBuffer] = None
         self._mesh, self._rules, self._placement = mesh, rules, placement
         self._grouped_payload = None  # IVF gather-free payload slabs (lazy)
+        # predicate-filtered serving state: the RAW attribute table (defaults
+        # to the de-normalized filter columns the index was built from), its
+        # column names, and the selectivity-aware query planner
+        self._init_attrs(attributes, attr_names)
         if routing not in ("dense", "routed"):
             raise ValueError(
                 f"routing must be 'dense' or 'routed', got {routing!r}")
@@ -370,16 +486,64 @@ class FCVIEngine:
             self.health = ShardHealth(self._sharded.n_shards,
                                       straggler_z=self.cfg.straggler_z)
 
+    def _init_attrs(self, attributes, attr_names):
+        """Set up the predicate-filtered serving state.
+
+        ``attributes`` is the (n, m) RAW attribute table predicates evaluate
+        against; when omitted it defaults to the de-normalized filter columns
+        (``fcvi.filters_raw``), so ``F.range("f0", ...)`` works out of the
+        box on any index. ``attr_names`` names the columns (default
+        ``f0..f{m-1}``). The planner's histograms are built here, once."""
+        mf = self.index.transform.filt_norm.mean.shape[-1]
+        if attributes is None:
+            attrs = np.asarray(fcvi.filters_raw(self.index), np.float32)
+        else:
+            attrs = np.asarray(attributes, np.float32)
+            if attrs.shape != (self.index.size, mf):
+                # column count must match the filter dimension: the fold
+                # plan's representative vector feeds the filter-side psi
+                # transform, and delta rows are predicate-checked against
+                # their insert filters
+                raise ValueError(
+                    f"attributes must be (index.size={self.index.size}, "
+                    f"m={mf}); got shape {attrs.shape}")
+        m = attrs.shape[1]
+        if attr_names is None:
+            attr_names = tuple(f"f{j}" for j in range(m))
+        else:
+            attr_names = tuple(attr_names)
+            if len(attr_names) != m:
+                raise ValueError(
+                    f"attr_names has {len(attr_names)} entries for "
+                    f"{m} attribute columns")
+        self._attrs_np = attrs
+        self._attr_names = attr_names
+        self._col_means = attrs.mean(axis=0).astype(np.float32)
+        self._rebuild_planner()
+
+    def _rebuild_planner(self):
+        cfg = self.index.config
+        if cfg.backend in ("flat", "ivf"):
+            self.planner = QueryPlanner.build(
+                self._attrs_np, backend=cfg.backend,
+                storage_fp32=cfg.resolved_storage_dtype() is None,
+                sharded=self._mesh is not None)
+        else:
+            self.planner = None  # PQ: no filtered plans
+
     def _build_sharded(self):
         """(Re)shard the serving state onto the configured mesh."""
         from repro.serve.sharded import ShardedServing
 
+        attrs = (self._attrs_np
+                 if self.index.config.backend in ("flat", "ivf") else None)
         self._sharded = ShardedServing(self.index, self._mesh,
                                        rules=self._rules,
                                        placement=self._placement,
                                        routing=self._routing,
                                        router_nprobe=self.cfg.router_nprobe,
-                                       router_centers=self._router_centers)
+                                       router_centers=self._router_centers,
+                                       attrs=attrs)
         self._sharded_delta = None
 
     @property
@@ -508,12 +672,26 @@ class FCVIEngine:
         return jnp.asarray(self.health.alive_mask())
 
     # -- search -----------------------------------------------------------
-    def search(self, queries: np.ndarray, filters: np.ndarray):
-        """queries: (n, d) fp32; filters: (n, m) fp32 (raw, un-normalized).
-        Returns (scores (n, k) fp32, ids (n, k) int64); ids >= ``index.size``
-        refer to un-compacted delta inserts. In routed mode the cache-miss
-        queue is first sorted by router shard-group signature so co-routed
-        queries share a padded batch (and unprobed shards actually skip).
+    def search(self, queries: np.ndarray, filters: Optional[np.ndarray] = None,
+               *, filter: Optional[Predicate] = None,
+               plan: Optional[str] = None):
+        """queries: (n, d) fp32. Two serving modes, selected by the kwargs:
+
+        * SIMILARITY mode (``filters`` (n, m) fp32, raw, un-normalized):
+          the paper's combined-score search. Returns (scores (n, k) fp32,
+          ids (n, k) int64); ids >= ``index.size`` refer to un-compacted
+          delta inserts. In routed mode the cache-miss queue is first
+          sorted by router shard-group signature so co-routed queries
+          share a padded batch (and unprobed shards actually skip).
+        * PREDICATE mode (``filter=F.range("price", 10, 50) &
+          F.isin("region", [...])``): exact top-k by L2 restricted to the
+          rows satisfying the predicate (see ``repro.core.filters``). The
+          selectivity-aware planner picks the physical plan per query
+          batch (``plan`` forces one of "fold" / "mask" / "routed");
+          scores are negative squared distances against the fold-
+          transformed query. Queries with no eligible row return
+          (-inf, -1) rows. This path bypasses the result cache (the
+          predicate is not part of the cache key).
 
         Inputs are validated at this boundary (see ``_validate_inputs``).
         With dead shards the engine serves DEGRADED: results are
@@ -521,6 +699,18 @@ class FCVIEngine:
         ``stats.last_coverage`` flags the queries the dead shards could have
         affected. Raises ``BackpressureError`` when the cache-miss queue
         exceeds ``cfg.queue_budget`` (> 0)."""
+        if filter is not None:
+            if filters is not None:
+                raise ValueError(
+                    "pass either filters= (similarity mode) or filter= "
+                    "(predicate mode), not both")
+            return self._search_filtered(queries, filter, plan=plan)
+        if filters is None:
+            raise TypeError(
+                "search() needs filters= (similarity mode) or filter= "
+                "(predicate mode)")
+        if plan is not None:
+            raise ValueError("plan= only applies to predicate mode (filter=)")
         queries, filters = self._validate_inputs(queries, filters)
         t0 = time.perf_counter()
         n = queries.shape[0]
@@ -590,6 +780,168 @@ class FCVIEngine:
         self.stats.last_coverage = coverage
         self.stats.total_time_s += time.perf_counter() - t0
         return out_scores, out_ids
+
+    # -- predicate-filtered search (filter algebra + planner) --------------
+    def _search_filtered(self, queries, pred: Predicate,
+                         plan: Optional[str] = None):
+        """Exact predicate-filtered top-k (see ``search`` docstring).
+
+        The predicate compiles once per call to fixed-shape arrays
+        (``repro.core.filters.compile_predicate``); eligibility is evaluated
+        host-side over the RAW attribute table and enters the jitted steps
+        as a DATA operand, so plan identity + k + the pow-2 batch bucket are
+        the only trace keys. All plans score against the SAME fold-
+        transformed queries and funnel into the same canonical d2 + lexsort
+        + finalize, so forced plans and topologies agree bit-for-bit.
+        Pending delta rows are predicate-checked against the filters they
+        were inserted with (when a custom ``attributes`` table was supplied,
+        inserts must pass filters in that same attribute space)."""
+        if self.planner is None:
+            raise ValueError(
+                "predicate-filtered search needs a flat or ivf backend "
+                f"(index backend is {self.index.config.backend!r})")
+        t0 = time.perf_counter()
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2 or q.shape[0] == 0:
+            raise ValueError(
+                f"queries must be a non-empty (n, d) batch; got shape "
+                f"{np.shape(queries)}")
+        d = self.index.transform.vec_norm.mean.shape[-1]
+        if q.shape[1] != d:
+            raise ValueError(
+                f"query dimension mismatch: got {q.shape[1]}, index expects "
+                f"{d}")
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain NaN/Inf values")
+        n, k = q.shape[0], self.cfg.k
+        cp = compile_predicate(pred, self._attr_names)
+        chosen = plan if plan is not None else self.planner.choose(cp)
+        if plan is not None:
+            if plan not in PLANS:
+                raise ValueError(f"unknown plan {plan!r}; expected one of "
+                                 f"{PLANS}")
+            if plan == PLAN_FOLD and not self.planner.fold_capable(cp):
+                raise ValueError(
+                    "plan='fold' needs a flat fp32 backend and a single-"
+                    "attribute predicate")
+            if plan == PLAN_ROUTED and not self.planner.routed_capable():
+                raise ValueError(
+                    "plan='routed' needs an IVF backend or a sharded mesh")
+        self.stats.queries += n
+        self.stats.filtered_queries += n
+        setattr(self.stats, f"plan_{chosen}",
+                getattr(self.stats, f"plan_{chosen}") + n)
+        self.stats.last_coverage = np.ones((n,), bool)
+
+        elig_np = cp.eval_np(self._attrs_np)
+        delta = self._ensure_delta()
+        delig_np = None
+        if delta is not None:
+            delig_np = cp.eval_np(
+                np.concatenate(self._delta_f).astype(np.float32))
+        n_elig = int(elig_np.sum())
+        nd_elig = 0 if delig_np is None else int(delig_np.sum())
+        out_scores = np.full((n, k), -np.inf, np.float32)
+        out_ids = np.full((n, k), -1, np.int64)
+        if n_elig + nd_elig == 0:
+            # zero-match predicate: certified-empty results, not padded
+            # id-0 garbage (coverage stays 1.0 — the answer IS empty)
+            self.stats.total_time_s += time.perf_counter() - t0
+            return out_scores, out_ids
+
+        # every plan scores against the SAME folded queries, computed once:
+        # psi folds the predicate's representative RAW filter vector into
+        # the query transform (the paper's filter fold)
+        fold_raw = cp.fold_target_raw(self._col_means)
+        q_t_all = fcvi.fold_queries(self.index, jnp.asarray(q), fold_raw)
+        elig_j = jnp.asarray(elig_np)
+        delig_j = None if delig_np is None else jnp.asarray(delig_np)
+
+        main_dead = n_elig == 0
+        uniq = n_live = None
+        if (chosen == PLAN_ROUTED and self._sharded is None
+                and not main_dead):
+            r = ivf_mod.eligible_lists(np.asarray(self.index.backend.lists),
+                                       elig_np)
+            assert r is not None  # n_elig > 0 => at least one live list
+            uniq, n_live = jnp.asarray(r[0]), jnp.asarray(r[1])
+        kp = self.planner.kp_for(chosen, cp, k)
+        if self.index.config.backend == "flat":
+            kp = min(kp, self.index.size)  # top-k width can't exceed the scan
+
+        bs = self.cfg.batch_size
+        for s in range(0, n, bs):
+            idxs = np.arange(s, min(s + bs, n))
+            nb = min(bs, _pow2_at_least(len(idxs)))
+            sel = np.full((nb,), idxs[-1], np.int64)
+            sel[: len(idxs)] = idxs
+            q_t = q_t_all[jnp.asarray(sel)]
+            d2, ids = self._filtered_main(chosen, cp, q_t, elig_j,
+                                          uniq, n_live, k=k, kp=kp,
+                                          main_dead=main_dead)
+            if delta is not None and nd_elig > 0:
+                dd2, dids = _filtered_delta_step(delta.flat, q_t, delig_j,
+                                                 k=k)
+                dids = jnp.where(dids == flat_mod.DEAD_ID, flat_mod.DEAD_ID,
+                                 dids + self.index.size)
+                d2, ids = flat_mod.lexsort_topk(
+                    jnp.concatenate([d2, dd2], axis=-1),
+                    jnp.concatenate([ids, dids], axis=-1), k)
+            scores, ids = flat_mod.finalize_filtered(d2, ids)
+            out_scores[idxs] = np.asarray(scores)[: len(idxs)]
+            out_ids[idxs] = np.asarray(ids, np.int64)[: len(idxs)]
+            self.stats.scan_batches += 1
+
+        self.stats.total_time_s += time.perf_counter() - t0
+        return out_scores, out_ids
+
+    def _filtered_main(self, plan: str, cp, q_t, elig_j, uniq, n_live, *,
+                       k: int, kp: int, main_dead: bool):
+        """Main-tier (d2, ids) for one padded batch under ``plan``.
+
+        Pre-finalize convention: dead slots are (+inf, DEAD_ID) so the delta
+        tier merges in d2-space. Sharded engines run mask/routed through the
+        shard_map filtered step; the fold plan is always meshless (its
+        certificate needs the global unmasked scan) — documented trade-off,
+        the planner only picks it for flat fp32 where the meshless scan is
+        cheap."""
+        b = q_t.shape[0]
+        if main_dead:
+            return (jnp.full((b, k), jnp.inf, jnp.float32),
+                    jnp.full((b, k), flat_mod.DEAD_ID, jnp.int32))
+        if self._sharded is not None and plan in (PLAN_MASK, PLAN_ROUTED):
+            lo, hi, iv, ic = cp.as_arrays()
+            return self._sharded.filtered_step(
+                q_t, lo, hi, iv, ic, k=k, routed=(plan == PLAN_ROUTED))
+        backend = self.index.backend
+        up = self.index.config.use_pallas
+        if plan == PLAN_FOLD:
+            d2, ids, cert = _filtered_fold_step(backend, q_t, elig_j,
+                                                k=k, kp=kp, use_pallas=up)
+            need = ~np.asarray(cert)
+            if need.any():
+                # uncertified rows re-run under the exhaustive mask plan in
+                # a pow-2 sub-batch (same pattern as _dense_subbatch)
+                fidx = np.nonzero(need)[0]
+                self.stats.filtered_fallbacks += len(fidx)
+                nb = b
+                while nb // 2 >= max(len(fidx), 1):
+                    nb //= 2
+                sel = np.zeros((nb,), np.int64)
+                sel[: len(fidx)] = fidx
+                kpf = min(k + CANDIDATE_PAD, self.index.size)
+                d2f, idsf = _filtered_mask_step(
+                    backend, q_t[jnp.asarray(sel)], elig_j,
+                    k=k, kp=kpf, use_pallas=up)
+                take = jnp.asarray(fidx)
+                d2 = d2.at[take].set(d2f[: len(fidx)])
+                ids = ids.at[take].set(idsf[: len(fidx)])
+            return d2, ids
+        if plan == PLAN_MASK:
+            return _filtered_mask_step(backend, q_t, elig_j, k=k, kp=kp,
+                                       use_pallas=up)
+        return _filtered_routed_step(backend, q_t, elig_j, uniq, n_live,
+                                     k=k, kp=kp, use_pallas=up)
 
     def _dispatch_batch(self, q, f, k, n_real: int, alive):
         """One padded batch through the resilience envelope: bounded retry
@@ -842,6 +1194,11 @@ class FCVIEngine:
         v = np.concatenate(self._delta_v)
         f = np.concatenate(self._delta_f)
         self.index = fcvi.extend(self.index, jnp.asarray(v), jnp.asarray(f))
+        # the compacted rows' attribute values are the filters they were
+        # inserted with; refresh the planner's selectivity histograms
+        self._attrs_np = np.concatenate([self._attrs_np, f])
+        self._col_means = self._attrs_np.mean(axis=0).astype(np.float32)
+        self._rebuild_planner()
         self._delta_v, self._delta_f = [], []
         self._delta = None
         self._sharded_delta = None
@@ -907,6 +1264,10 @@ class FCVIEngine:
         with self._heal_lock:
             self.index = cand.index
             self._mesh = new_mesh
+            self._attrs_np = cand._attrs_np
+            self._attr_names = cand._attr_names
+            self._col_means = cand._col_means
+            self.planner = cand.planner
             self._router_centers = cand._router_centers
             self._sharded = cand._sharded
             self._sharded_delta = cand._sharded_delta
@@ -943,7 +1304,8 @@ class FCVIEngine:
         df = (np.concatenate(self._delta_f) if self._delta_f
               else np.zeros((0, m), np.float32))
         tree = {"index": fcvi.index_state(self.index),
-                "delta_v": dv, "delta_f": df}
+                "delta_v": dv, "delta_f": df,
+                "attrs": self._attrs_np}
         if (self._sharded is not None
                 and getattr(self._sharded.slab, "router_centers", None)
                 is not None):
@@ -953,7 +1315,8 @@ class FCVIEngine:
             "fcvi_config": dataclasses.asdict(self.index.config),
             "engine_config": dataclasses.asdict(self.cfg),
             "serving": {"placement": self._placement,
-                        "routing": self._routing},
+                        "routing": self._routing,
+                        "attr_names": list(self._attr_names)},
         }
         return ckpt_mod.save(ckpt_dir, step, tree, metadata=metadata,
                              keep=keep)
@@ -992,7 +1355,9 @@ class FCVIEngine:
         if "router" in tree:
             centers = jnp.asarray(tree["router"]["centers"], jnp.float32)
         eng = cls(index, ecfg, mesh=mesh, rules=rules, placement=placement,
-                  routing=routing, router_centers=centers)
+                  routing=routing, router_centers=centers,
+                  attributes=tree.get("attrs"),
+                  attr_names=serving.get("attr_names"))
         if tree["delta_v"].shape[0]:
             eng._delta_v = [np.asarray(tree["delta_v"], np.float32)]
             eng._delta_f = [np.asarray(tree["delta_f"], np.float32)]

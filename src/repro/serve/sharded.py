@@ -222,7 +222,8 @@ class ShardedServing:
     def __init__(self, index, mesh, rules=None, *,
                  placement: str = "contiguous", routing: str = "dense",
                  router_nprobe: int = 0,
-                 router_centers: Optional[Array] = None):
+                 router_centers: Optional[Array] = None,
+                 attrs: Optional[Array] = None):
         from repro.distributed.sharding import AxisRules
 
         if routing not in ("dense", "routed"):
@@ -241,7 +242,8 @@ class ShardedServing:
                     "placement='cluster': the router needs the psi-cluster "
                     "ownership tables of filter-centric placement")
             self.slab = index.backend.slab().shard(
-                mesh, self.rules, placement=placement, centers=router_centers)
+                mesh, self.rules, placement=placement, centers=router_centers,
+                attrs=attrs)
         elif cfg.backend == "ivf":
             # "cluster" = filter-centric placement: affinity packing keeps a
             # query's co-probed lists on few shards (routing locality), where
@@ -249,7 +251,7 @@ class ShardedServing:
             ivf_placement = "affinity" if placement == "cluster" else placement
             self.slab = index.backend.slab().shard(
                 mesh, self.rules, placement=ivf_placement,
-                list_sizes=index.backend.list_sizes)
+                list_sizes=index.backend.list_sizes, attrs=attrs)
         elif cfg.backend == "pq":
             if routing == "routed":
                 raise ValueError(
@@ -286,6 +288,7 @@ class ShardedServing:
         self.filters_n = self._put_rows(
             slab_mod.pad_dim0(index.filters_n, n_pad, 0))
         self._steps = {}
+        self._fsteps = {}      # filtered (predicate) steps, keyed (k, routed)
         self._payload = None   # gather-free payload slabs (lazy)
 
     def _put_rows(self, x: Array) -> Array:
@@ -956,3 +959,121 @@ class ShardedServing:
         mapped = shard_map(body, mesh=self.mesh, in_specs=specs,
                            out_specs=(P(),) * n_out, check_vma=False)
         return jax.jit(mapped)
+
+    # -- the sharded filtered (predicate) step ----------------------------
+    def filtered_step(self, q_t: Array, lo: Array, hi: Array,
+                      isin_vals: Array, isin_count: Array, *, k: int,
+                      routed: bool = False):
+        """Exact predicate-filtered top-k over the sharded slab.
+
+        ``q_t`` is the (b, d) fold-transformed query batch (computed once by
+        the engine, replicated in); the four predicate arrays are the
+        fixed-shape ``CompiledPredicate`` encoding — pure DATA operands, so
+        one trace per (k, routed) signature serves every predicate. Each
+        shard evaluates the predicate over its slab-resident RAW attribute
+        block (NaN pad/sentinel rows are never eligible), computes the exact
+        fp32 squared distances of its ELIGIBLE rows with the same elementwise
+        expression as ``flat.filtered_d2``, and emits its local (d2, id)
+        top-k under the deterministic (d2 asc, id asc) order; the per-shard
+        sets merge by the same two-key sort outside the shard_map. Results
+        are bit-identical to the single-device MASK plan.
+
+        ``routed=True`` wraps each shard's scan in a ``lax.cond`` that skips
+        the distance work when NO local row is eligible — exact by
+        construction (ineligible rows contribute (+inf, DEAD) either way),
+        it only changes which code runs. Returns (d2 (b, k), ids (b, k)) in
+        the pre-finalize convention (dead slots (+inf, DEAD_ID)) so the
+        engine can merge the delta tier in d2-space before
+        ``flat.finalize_filtered``.
+        """
+        if self.slab.attrs is None:
+            raise ValueError(
+                "filtered_step needs attribute columns on the slab: "
+                "construct ShardedServing(..., attrs=<raw (n, m) table>)")
+        key = (k, routed)
+        fn = self._fsteps.get(key)
+        if fn is None:
+            fn = self._fsteps[key] = self._build_filtered_step(k, routed)
+        return fn(*self._fslab_args(), q_t, lo, hi, isin_vals, isin_count)
+
+    def _fslab_args(self):
+        s = self.slab
+        if self.index.config.backend == "flat":
+            base = (s.vectors, s.row_ids, s.attrs)
+            if s.scales is not None:
+                base = base + (s.scales,)
+            return base
+        base = (s.grouped, s.lists, s.attrs)
+        if s.grouped_scales is not None:
+            base = base + (s.grouped_scales,)
+        return base
+
+    def _build_filtered_step(self, k: int, routed: bool):
+        from repro.core import filters as filters_mod
+        from repro.serve import engine as engine_mod
+
+        backend = self.index.config.backend
+        if backend not in ("flat", "ivf"):
+            raise ValueError(
+                f"filtered serving supports the flat/ivf backends, "
+                f"not {backend!r}")
+        axes, ns = self.axes, self.n_shards
+        has_scales = (self.slab.scales is not None if backend == "flat"
+                      else self.slab.grouped_scales is not None)
+
+        def body(*args):
+            engine_mod._TRACE_COUNT[0] += 1
+            if has_scales:
+                vecs, ids_raw, attrs, scales = args[:4]
+                rest = args[4:]
+            else:
+                vecs, ids_raw, attrs = args[:3]
+                scales = None
+                rest = args[3:]
+            q_t, lo, hi, iv, ic = rest
+            b = q_t.shape[0]
+            if backend == "ivf":
+                # flatten the (slot, max_list, ...) grouped layout to rows
+                d = vecs.shape[-1]
+                vecs = vecs.reshape(-1, d)
+                ids_raw = ids_raw.reshape(-1)
+                attrs = attrs.reshape(-1, attrs.shape[-1])
+                if scales is not None:
+                    scales = scales.reshape(-1)
+            elig = filters_mod.eval_mask(attrs, lo, hi, iv, ic)
+            elig = jnp.logical_and(elig, ids_raw >= 0)
+            ids = jnp.where(elig, ids_raw,
+                            flat_mod.DEAD_ID).astype(jnp.int32)
+
+            def scan(_):
+                rows = vecs.astype(jnp.float32)
+                if scales is not None:
+                    rows = rows * scales[:, None]
+                d2 = flat_mod.filtered_d2(q_t, rows)          # (b, n_local)
+                d2 = jnp.where(elig[None, :], d2, jnp.inf)
+                return flat_mod.lexsort_topk(
+                    d2, jnp.broadcast_to(ids[None, :], d2.shape), k)
+
+            def skip(_):
+                return (jnp.full((b, k), jnp.inf, jnp.float32),
+                        jnp.full((b, k), flat_mod.DEAD_ID, jnp.int32))
+
+            if routed:
+                return jax.lax.cond(jnp.any(elig), scan, skip, None)
+            return scan(None)
+
+        row = P(axes)
+        n_in = 4 if has_scales else 3
+        mapped = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(row,) * n_in + (P(),) * 5,
+            out_specs=(P(axes), P(axes)), check_vma=False)
+
+        def step(*args):
+            d2, ids = mapped(*args)                  # (ns*b, k) stacked
+            b = args[n_in].shape[0]
+            d2 = d2.reshape(ns, b, k).transpose(1, 0, 2).reshape(b, ns * k)
+            ids = ids.reshape(ns, b, k).transpose(1, 0, 2).reshape(b, ns * k)
+            return flat_mod.lexsort_topk(d2, ids, k)
+
+        return jax.jit(step)

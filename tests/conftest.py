@@ -9,3 +9,7 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers",
+        "property: randomized property-based differential test "
+        "(hypothesis-driven when installed, fixed-seed fallback otherwise)")

@@ -1,0 +1,404 @@
+"""Property-based differential oracle suite for the filter algebra.
+
+The contract under test (the exactness anchor of the whole filter stack):
+for ANY predicate expressible in ``repro.core.filters`` — range / equality /
+IN-list / conjunctions over multiple attribute columns — and any corpus,
+``FCVIEngine.search(q, filter=pred)`` returns the EXACT top-k by squared L2
+over the eligible rows, and every physical plan (fold / mask / routed),
+kernel dispatch (pallas on / off), and topology (meshless / sharded /
+routed-sharded) produces BIT-IDENTICAL output for the same call.
+
+Structure:
+  * a numpy brute-force oracle (fp64 ordering over the dequantized stored
+    rows, deterministic (d2, id) tie-break) checks semantic exactness;
+  * forced-plan and planner-chosen calls are compared bitwise against each
+    other (the cheap-but-strict cross-plan differential);
+  * randomized (corpus, attribute table, predicate tree) cases come from
+    ``hypothesis`` when it is installed (CI), else from a fixed-seed
+    parametrized fallback running the SAME case body — both deterministic;
+  * the multi-shard topologies run in a subprocess with 8 forced host
+    devices, like tests/test_multidevice.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build
+from repro.core import fcvi
+from repro.core.filters import MAX_ISIN, F, compile_predicate
+from repro.launch.mesh import make_mesh
+from repro.serve.engine import EngineConfig, FCVIEngine
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # hypothesis is a CI dependency, not a runtime
+    HAVE_HYPOTHESIS = False   # one: fall back to fixed-seed parametrization
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Case generation (shared by the hypothesis and fallback entry points)
+# ---------------------------------------------------------------------------
+
+D = 16  # vector dim; m=4 attribute/filter columns (d % m == 0 for partition)
+M = 4
+
+
+def make_case(seed: int):
+    """Deterministic (corpus, attrs, queries, predicate) from one seed.
+
+    Attribute columns are a mix of continuous and low-cardinality
+    categorical (so IN-list / equality clauses actually hit rows and the
+    planner's value-count path is exercised); predicate bounds are drawn
+    from the realized attribute values, so selectivity spans the whole
+    range including empty and all-rows matches.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 300))
+    vectors = rng.normal(size=(n, D)).astype(np.float32)
+    attrs = rng.normal(size=(n, M)).astype(np.float32)
+    # columns 2..3 categorical: a handful of distinct float codes
+    for j in (2, 3):
+        card = int(rng.integers(2, 9))
+        attrs[:, j] = rng.integers(0, card, size=n).astype(np.float32)
+    queries = rng.normal(size=(int(rng.integers(1, 6)), D)).astype(np.float32)
+
+    clauses = []
+    for _ in range(int(rng.integers(1, 4))):
+        j = int(rng.integers(0, M))
+        name = f"f{j}"
+        kind = rng.integers(0, 3)
+        col = attrs[:, j]
+        if kind == 0:          # range, bounds from data quantiles (+ slack)
+            lo, hi = np.sort(rng.choice(col, size=2, replace=True))
+            lo += rng.normal() * 0.1
+            hi += rng.normal() * 0.1
+            clauses.append(F.range(name, float(lo), float(hi)))
+        elif kind == 1:        # equality against a realized value
+            clauses.append(F.eq(name, float(rng.choice(col))))
+        else:                  # IN-list over realized values
+            sz = int(rng.integers(1, min(MAX_ISIN, 6)))
+            vals = [float(v) for v in rng.choice(col, size=sz, replace=True)]
+            clauses.append(F.isin(name, vals))
+    pred = clauses[0]
+    for c in clauses[1:]:
+        pred = pred & c
+    backend = ["flat", "ivf"][seed % 2]
+    use_pallas = bool((seed // 2) % 2)
+    return vectors, attrs, queries, pred, backend, use_pallas
+
+
+def brute_force_oracle(engine, queries, pred, k, tie_tol=1e-4):
+    """fp64 numpy filtered top-k over the engine's own fold-transformed
+    queries and dequantized stored rows, (d2 asc, id asc) tie-break.
+
+    Returns (scores, ids, ambiguous) in the engine's output convention.
+    ``ambiguous`` flags top-k slots whose fp64 distance sits within
+    ``tie_tol`` of a neighbor: there the ENGINE's fp32 arithmetic may
+    legitimately order the tie the other way, so positional id equality is
+    only asserted on unambiguous slots (score values are always checked)."""
+    cp = compile_predicate(pred, engine._attr_names)
+    elig = cp.eval_np(engine._attrs_np)
+    q_t = np.asarray(fcvi.fold_queries(
+        engine.index, jnp.asarray(np.asarray(queries, np.float32)),
+        cp.fold_target_raw(engine._col_means)), np.float64)
+    be = engine.index.backend
+    rows = np.asarray(be.vectors, np.float64)
+    if be.scales is not None:
+        rows = rows * np.asarray(be.scales, np.float64)[:, None]
+    n, b = rows.shape[0], q_t.shape[0]
+    d2 = ((q_t[:, None, :] - rows[None, :, :]) ** 2).sum(-1)
+    d2[:, ~elig] = np.inf
+    ids = np.broadcast_to(np.arange(n), (b, n))
+    order = np.lexsort((ids, d2), axis=-1)
+    sd2 = np.take_along_axis(d2, order, axis=-1)         # (b, n) ascending
+    if n < k:                                            # pad to k slots
+        pad = np.full((b, k - n), np.inf)
+        sd2 = np.concatenate([sd2, pad], axis=-1)
+        order = np.concatenate(
+            [order, np.zeros((b, k - n), order.dtype)], axis=-1)
+    with np.errstate(invalid="ignore"):
+        prev = np.concatenate([np.full((b, 1), -np.inf), sd2[:, :-1]], -1)
+        nxt = np.concatenate([sd2[:, 1:], np.full((b, 1), np.inf)], -1)
+        amb = (((sd2 - prev) < tie_tol) | ((nxt - sd2) < tie_tol))
+    amb &= np.isfinite(sd2)
+    top_d2, order, amb = sd2[:, :k], order[:, :k], amb[:, :k]
+    dead = np.isinf(top_d2)
+    scores = np.where(dead, -np.inf, -top_d2).astype(np.float32)
+    out_ids = np.where(dead, -1, order).astype(np.int64)
+    return scores, out_ids, amb
+
+
+def plans_for(engine, pred):
+    cp = compile_predicate(pred, engine._attr_names)
+    plans = [None, "mask"]
+    if engine.planner.fold_capable(cp):
+        plans.append("fold")
+    if engine.planner.routed_capable():
+        plans.append("routed")
+    return plans
+
+
+def check_case(seed: int):
+    vectors, attrs, queries, pred, backend, use_pallas = make_case(seed)
+    cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend, nlist=8,
+                     nprobe=4, use_pallas=use_pallas)
+    idx = build(jnp.asarray(vectors), jnp.asarray(attrs), cfg)
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=attrs,
+                     attr_names=[f"f{j}" for j in range(M)])
+    want_s, want_i, amb = brute_force_oracle(eng, queries, pred, k=5)
+    outs = {pl: eng.search(queries, filter=pred, plan=pl)
+            for pl in plans_for(eng, pred)}
+    for pl, (s, i) in outs.items():
+        assert ((i == want_i) | amb).all(), (
+            f"ids vs oracle (plan={pl}, seed={seed}, pred={pred}):\n"
+            f"{i}\nvs\n{want_i}")
+        np.testing.assert_allclose(
+            s, want_s, rtol=1e-4, atol=1e-4,
+            err_msg=f"scores vs oracle (plan={pl}, seed={seed})")
+    base = outs[None]
+    for pl, (s, i) in outs.items():  # cross-plan: BITWISE
+        assert np.array_equal(s, base[0]) and np.array_equal(i, base[1]), (
+            f"plan {pl} != planner choice bitwise (seed={seed}, pred={pred})")
+
+
+# ---------------------------------------------------------------------------
+# The property suite (hypothesis when available, seeded fallback otherwise)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.property
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(seed=st.integers(min_value=0, max_value=50_000))
+    def test_differential_oracle_property(seed):
+        check_case(seed)
+
+else:
+
+    @pytest.mark.property
+    @pytest.mark.parametrize("seed", list(range(12)))
+    def test_differential_oracle_property(seed):
+        check_case(seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic edge cases (the zero-match bugfix and friends)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_engine():
+    rng = np.random.default_rng(7)
+    v = rng.normal(size=(120, D)).astype(np.float32)
+    a = rng.normal(size=(120, M)).astype(np.float32)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=a)
+    q = rng.normal(size=(3, D)).astype(np.float32)
+    return eng, a, q
+
+
+def test_zero_match_returns_certified_empty(small_engine):
+    """A predicate matching nothing must return (-inf, -1) rows — certified
+    empty with coverage 1.0 — not padded id-0 garbage."""
+    eng, a, q = small_engine
+    s, i = eng.search(q, filter=F.range("f0", 100.0, 200.0))
+    assert (i == -1).all()
+    assert np.isneginf(s).all()
+    assert eng.stats.last_coverage.all()
+    # disjoint IN-lists compile to an always-false interval, same contract
+    s, i = eng.search(q, filter=F.isin("f1", [1.0]) & F.isin("f1", [2.0]))
+    assert (i == -1).all() and np.isneginf(s).all()
+
+
+def test_single_row_match(small_engine):
+    eng, a, q = small_engine
+    s, i = eng.search(q, filter=F.eq("f0", float(a[17, 0])))
+    assert (i[:, 0] == 17).all()
+    assert (i[:, 1:] == -1).all()
+    assert np.isfinite(s[:, 0]).all() and np.isneginf(s[:, 1:]).all()
+
+
+def test_all_rows_match_equals_unfiltered_topk(small_engine):
+    """An all-true predicate is plain exact L2 top-k over everything."""
+    eng, a, q = small_engine
+    pred = F.range("f0", -1e9, 1e9)
+    ws, wi, amb = brute_force_oracle(eng, q, pred, k=5)
+    s, i = eng.search(q, filter=pred)
+    assert ((i == wi) | amb).all()
+    assert (i >= 0).all()
+
+
+def test_k_exceeds_eligible_pads_dead_slots(small_engine):
+    eng, a, q = small_engine
+    order = np.argsort(a[:, 0])
+    lo, hi = float(a[order[0], 0]), float(a[order[2], 0])
+    s, i = eng.search(q, filter=F.range("f0", lo, hi))
+    n_match = int(((a[:, 0] >= lo) & (a[:, 0] <= hi)).sum())
+    assert 1 <= n_match < 5
+    assert ((i >= 0).sum(axis=1) == n_match).all()
+    assert np.isneginf(s[:, n_match:]).all()
+
+
+def test_unknown_attribute_rejected(small_engine):
+    eng, _, q = small_engine
+    with pytest.raises(ValueError, match="unknown attribute"):
+        eng.search(q, filter=F.range("price", 0.0, 1.0))
+
+
+def test_filter_and_filters_are_exclusive(small_engine):
+    eng, a, q = small_engine
+    with pytest.raises(ValueError, match="not both"):
+        eng.search(q, a[:3, :], filter=F.range("f0", 0.0, 1.0))
+    with pytest.raises(TypeError):
+        eng.search(q)
+
+
+def test_delta_rows_are_predicate_checked():
+    """Pending (un-compacted) inserts participate in filtered search: their
+    insert filters are their attribute values, eligible delta rows surface
+    with ids >= index.size, ineligible ones never do."""
+    rng = np.random.default_rng(11)
+    v = rng.normal(size=(100, D)).astype(np.float32)
+    a = rng.normal(size=(100, M)).astype(np.float32)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=4, batch_size=8,
+                                       compact_threshold=10_000))
+    q = rng.normal(size=(2, D)).astype(np.float32)
+    pred = F.range("f0", 50.0, 60.0)  # nothing in the base corpus
+    s, i = eng.search(q, filter=pred)
+    assert (i == -1).all()
+    nv = rng.normal(size=(3, D)).astype(np.float32)
+    nf = a[:3].copy()
+    nf[:, 0] = 55.0  # eligible delta rows
+    eng.insert(nv, nf)
+    s, i = eng.search(q, filter=pred)
+    assert set(i[:, :3].ravel()) == {100, 101, 102}
+    assert (i[:, 3] == -1).all()
+    # after compaction the same rows answer under corpus ids (extend appends,
+    # so they keep ids 100..102); scores are not compared across compaction —
+    # the planner's column means (and so the fold target) legitimately move
+    eng.compact()
+    s2, i2 = eng.search(q, filter=pred)
+    assert (np.sort(i2[:, :3], axis=1) == [100, 101, 102]).all()
+    assert (i2[:, 3] == -1).all()
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_reduced_storage_matches_oracle(storage):
+    """mask plan over bf16 / int8 slabs: exact w.r.t. the dequantized stored
+    rows (the oracle dequantizes the same way)."""
+    rng = np.random.default_rng(13)
+    v = rng.normal(size=(150, D)).astype(np.float32)
+    a = rng.normal(size=(150, M)).astype(np.float32)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat",
+                           storage_dtype=storage))
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=a)
+    q = rng.normal(size=(3, D)).astype(np.float32)
+    pred = F.range("f0", -0.7, 0.9) & F.range("f2", -2.0, 2.0)
+    ws, wi, amb = brute_force_oracle(eng, q, pred, k=5)
+    s, i = eng.search(q, filter=pred)
+    assert ((i == wi) | amb).all()
+    np.testing.assert_allclose(s, ws, rtol=1e-4, atol=1e-4)
+
+
+def test_pq_backend_rejects_predicates():
+    rng = np.random.default_rng(17)
+    v = rng.normal(size=(256, D)).astype(np.float32)
+    a = rng.normal(size=(256, M)).astype(np.float32)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="pq", pq_m=8,
+                           pq_ksub=16, pq_coarse=8))
+    eng = FCVIEngine(idx, EngineConfig(k=5))
+    with pytest.raises(ValueError, match="flat or ivf"):
+        eng.search(rng.normal(size=(2, D)).astype(np.float32),
+                   filter=F.range("f0", 0.0, 1.0))
+
+
+def test_save_restore_preserves_attribute_table(tmp_path):
+    rng = np.random.default_rng(19)
+    v = rng.normal(size=(80, D)).astype(np.float32)
+    a = rng.normal(size=(80, M)).astype(np.float32)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=5), attributes=a,
+                     attr_names=["price", "stock", "cat", "region"])
+    q = rng.normal(size=(2, D)).astype(np.float32)
+    pred = F.range("price", -0.5, 0.5) & F.range("region", -2.0, 2.0)
+    want = eng.search(q, filter=pred)
+    eng.save(str(tmp_path), step=1)
+    er = FCVIEngine.restore(str(tmp_path))
+    assert er._attr_names == ("price", "stock", "cat", "region")
+    got = er.search(q, filter=pred)
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_array_equal(got[0], want[0])
+
+
+# ---------------------------------------------------------------------------
+# 8-device sharded / routed topology matrix (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_topologies_bitwise_equal_8dev():
+    """Meshless vs 8-shard sharded vs routed-sharded, flat and IVF, across
+    forced plans: all bitwise equal, and equal to the fp64 oracle's ids."""
+    out = run_in_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        import sys; sys.path.insert(0, {src!r})
+        sys.path.insert(0, {tests!r})
+        from repro.core import FCVIConfig, build
+        from repro.serve.engine import EngineConfig, FCVIEngine
+        from test_filter_oracle import (brute_force_oracle, make_case,
+                                        plans_for, M)
+
+        assert len(jax.devices()) == 8
+        mesh = Mesh(np.array(jax.devices()), ("x",))
+        checked = 0
+        for seed in (0, 1, 2, 3, 6, 9):
+            vectors, attrs, queries, pred, backend, use_pallas = \\
+                make_case(seed)
+            cfg = FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend=backend,
+                             nlist=8, nprobe=4, use_pallas=use_pallas)
+            idx = build(jnp.asarray(vectors), jnp.asarray(attrs), cfg)
+            kw = dict(k=5, batch_size=8)
+            e0 = FCVIEngine(idx, EngineConfig(**kw), attributes=attrs)
+            e1 = FCVIEngine(idx, EngineConfig(**kw), attributes=attrs,
+                            mesh=mesh)
+            ws, wi, amb = brute_force_oracle(e0, queries, pred, k=5)
+            outs = []
+            for eng in (e0, e1):
+                for pl in plans_for(eng, pred):
+                    outs.append((eng is e1, pl,
+                                 eng.search(queries, filter=pred, plan=pl)))
+            s0, i0 = outs[0][2]
+            assert ((i0 == wi) | amb).all(), seed
+            for sharded, pl, (s, i) in outs:
+                assert np.array_equal(s, s0) and np.array_equal(i, i0), (
+                    seed, sharded, pl)
+                checked += 1
+        print("CASES", checked)
+    """.format(src=SRC,
+               tests=os.path.dirname(os.path.abspath(__file__))))
+    assert "CASES" in out

@@ -1,0 +1,196 @@
+"""Golden plan-choice tests for the selectivity-aware planner, plus the
+steady-state no-retrace contract of the filtered serving path.
+
+The planner is a pure performance decision (every plan is exact — see
+tests/test_filter_oracle.py), so what these tests pin down is the POLICY:
+which selectivity band maps to which physical plan on which (backend,
+topology, storage) — and the jit-key discipline: predicate bounds,
+IN-lists, and eligibility masks are data operands, so serving a stream of
+DIFFERENT predicates under one plan must not retrace anything.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FCVIConfig, build
+from repro.core.filters import F, compile_predicate
+from repro.serve import engine as engine_mod
+from repro.serve.engine import EngineConfig, FCVIEngine
+from repro.serve.planner import (PLAN_FOLD, PLAN_MASK, PLAN_ROUTED,
+                                 ColumnStats, QueryPlanner)
+
+M = 4
+NAMES = tuple(f"f{j}" for j in range(M))
+
+
+def make_attrs(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    attrs = rng.normal(size=(n, M)).astype(np.float32)
+    attrs[:, 2] = rng.integers(0, 8, size=n).astype(np.float32)  # categorical
+    return attrs
+
+
+def planner_for(attrs, *, backend="flat", storage_fp32=True, sharded=False):
+    return QueryPlanner.build(attrs, backend=backend,
+                              storage_fp32=storage_fp32, sharded=sharded)
+
+
+def cp_of(pred):
+    return compile_predicate(pred, NAMES)
+
+
+# ---------------------------------------------------------------------------
+# Selectivity estimation
+# ---------------------------------------------------------------------------
+
+def test_histogram_selectivity_tracks_truth():
+    attrs = make_attrs()
+    pl = planner_for(attrs)
+    for lo, hi in [(-0.5, 0.5), (-3.0, 3.0), (1.0, 2.0)]:
+        est = pl.selectivity(cp_of(F.range("f0", lo, hi)))
+        true = ((attrs[:, 0] >= lo) & (attrs[:, 0] <= hi)).mean()
+        assert abs(est - true) < 0.05, (lo, hi, est, true)
+
+
+def test_categorical_value_counts_are_exact():
+    attrs = make_attrs()
+    pl = planner_for(attrs)
+    assert pl.columns[2].value_counts is not None  # 8 distinct -> exact
+    est = pl.selectivity(cp_of(F.isin("f2", [0.0, 3.0])))
+    true = np.isin(attrs[:, 2], [0.0, 3.0]).mean()
+    assert abs(est - true) < 1e-6
+    # a value that never occurs estimates zero
+    assert pl.selectivity(cp_of(F.eq("f2", 99.0))) == 0.0
+
+
+def test_conjunction_multiplies_under_independence():
+    attrs = make_attrs()
+    pl = planner_for(attrs)
+    a = pl.selectivity(cp_of(F.range("f0", -0.5, 0.5)))
+    b = pl.selectivity(cp_of(F.range("f1", -0.5, 0.5)))
+    ab = pl.selectivity(cp_of(F.range("f0", -0.5, 0.5)
+                              & F.range("f1", -0.5, 0.5)))
+    assert abs(ab - a * b) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Golden plan choice per (selectivity band, backend, topology, storage)
+# ---------------------------------------------------------------------------
+
+BROAD = F.range("f0", -3.0, 3.0)              # sel ~ 0.997
+MID = F.range("f0", -0.5, 0.5)                # sel ~ 0.38
+NARROW = F.eq("f2", 5.0)                      # sel ~ 0.125
+VERY_NARROW = F.range("f0", 3.0, 4.0)         # sel ~ 0.001
+CONJ_BROAD = F.range("f0", -3.0, 3.0) & F.range("f1", -3.0, 3.0)
+
+
+@pytest.mark.parametrize("pred,backend,sharded,storage_fp32,want", [
+    # flat fp32 meshless: fold for broad single-attr, mask otherwise
+    (BROAD, "flat", False, True, PLAN_FOLD),
+    (MID, "flat", False, True, PLAN_MASK),
+    (VERY_NARROW, "flat", False, True, PLAN_MASK),   # nothing to route
+    (CONJ_BROAD, "flat", False, True, PLAN_MASK),    # fold is single-attr
+    # reduced storage: the fold certificate needs the fp32 scan
+    (BROAD, "flat", False, False, PLAN_MASK),
+    # IVF: routed for selective, mask otherwise (no fold off flat)
+    (VERY_NARROW, "ivf", False, True, PLAN_ROUTED),
+    (BROAD, "ivf", False, True, PLAN_MASK),
+    (NARROW, "ivf", False, True, PLAN_MASK),         # 0.125 > routed_max_sel
+    # sharded flat: shard lax.cond skip makes routing capable
+    (VERY_NARROW, "flat", True, True, PLAN_ROUTED),
+    (BROAD, "flat", True, True, PLAN_FOLD),
+])
+def test_golden_plan_choice(pred, backend, sharded, storage_fp32, want):
+    pl = planner_for(make_attrs(), backend=backend, sharded=sharded,
+                     storage_fp32=storage_fp32)
+    assert pl.choose(cp_of(pred)) == want
+
+
+def test_kp_scales_inversely_with_fold_selectivity():
+    pl = planner_for(make_attrs())
+    kp_broad = pl.kp_for(PLAN_FOLD, cp_of(BROAD), k=10)
+    kp_mid = pl.kp_for(PLAN_FOLD, cp_of(MID), k=10)
+    assert kp_broad < kp_mid            # rarer matches -> wider fold window
+    assert kp_broad >= 40               # >= 4k headroom for the certificate
+    kp_mask = pl.kp_for(PLAN_MASK, cp_of(MID), k=10)
+    assert kp_mask == 18                # k + CANDIDATE_PAD: scan is masked
+
+
+def test_engine_plan_counters_follow_choice():
+    rng = np.random.default_rng(3)
+    n = 600
+    v = rng.normal(size=(n, 16)).astype(np.float32)
+    a = make_attrs(n=n, seed=3)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=a)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    eng.search(q, filter=BROAD)
+    assert eng.stats.plan_fold == 4
+    eng.search(q, filter=MID)
+    assert eng.stats.plan_mask == 4
+    assert eng.stats.filtered_queries == 8
+
+
+# ---------------------------------------------------------------------------
+# Jit-key discipline: steady-state filtered serving never retraces
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_predicate_values():
+    """After one warmup search per plan, a stream of DIFFERENT predicates
+    (bounds, IN-lists, conjunction shapes all varying, same batch bucket)
+    must not trigger a single new trace: predicate state is data."""
+    rng = np.random.default_rng(5)
+    n = 500
+    v = rng.normal(size=(n, 16)).astype(np.float32)
+    a = make_attrs(n=n, seed=5)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=a)
+    q = rng.normal(size=(8, 16)).astype(np.float32)
+
+    # warmup: one trace per (plan, shape) key
+    eng.search(q, filter=F.range("f0", -0.4, 0.4), plan="mask")
+    eng.search(q, filter=F.isin("f2", [1.0, 2.0]), plan="mask")
+    tc = engine_mod.trace_count()
+    for step in range(6):
+        lo = -0.5 - 0.1 * step
+        preds = [F.range("f0", lo, -lo),
+                 F.isin("f2", [float(step % 8), float((step + 3) % 8)]),
+                 F.range("f1", lo, 1.0) & F.eq("f2", float(step % 8))]
+        for p in preds:
+            eng.search(q, filter=p, plan="mask")
+    assert engine_mod.trace_count() == tc, (
+        f"{engine_mod.trace_count() - tc} retraces in steady state")
+
+
+def test_no_retrace_fold_same_band():
+    """Fold keys on the pow-2 candidate width: predicates in the same
+    selectivity band reuse one trace."""
+    rng = np.random.default_rng(6)
+    n = 512
+    v = rng.normal(size=(n, 16)).astype(np.float32)
+    a = make_attrs(n=n, seed=6)
+    idx = build(jnp.asarray(v), jnp.asarray(a),
+                FCVIConfig(alpha=1.0, lam=0.6, c=8.0, backend="flat"))
+    eng = FCVIEngine(idx, EngineConfig(k=5, batch_size=8), attributes=a)
+    q = rng.normal(size=(8, 16)).astype(np.float32)
+    eng.search(q, filter=F.range("f0", -3.0, 3.0), plan="fold")
+    tc = engine_mod.trace_count()
+    fb = eng.stats.filtered_fallbacks
+    for lo in (-3.1, -2.9, -2.8, -3.3):
+        eng.search(q, filter=F.range("f0", lo, -lo), plan="fold")
+    if eng.stats.filtered_fallbacks == fb:    # no new fallback sub-batches
+        assert engine_mod.trace_count() == tc
+
+
+def test_column_stats_degenerate_inputs():
+    """Constant and tiny columns must not divide by zero or crash."""
+    st = ColumnStats.build(np.zeros((50,), np.float32))
+    assert st.sel_range(-1.0, 1.0) == pytest.approx(1.0)
+    assert st.sel_range(0.5, 1.0) == 0.0
+    st1 = ColumnStats.build(np.array([2.0], np.float32))
+    assert st1.sel_values([2.0]) == pytest.approx(1.0)
+    pl = QueryPlanner(columns=[st], n=0, backend="flat", storage_fp32=True,
+                      sharded=False)
+    assert pl.kp_for(PLAN_FOLD, cp_of(F.range("f0", 0.0, 1.0)), 5) == 5
